@@ -1,0 +1,67 @@
+"""End-to-end data-plane benchmark: broker-driven shard delivery.
+
+Measures simulated delivered bandwidth of the training input pipeline
+(fetch + decode + batch) under three conditions: healthy grid, one dead
+endpoint (failover), and a degraded top replica (straggler re-selection).
+derived = delivered MB/s of simulated transfer time.
+"""
+
+import numpy as np
+
+from repro.data.datasets import ShardManifest, SyntheticCorpus, materialize_on_grid
+from repro.data.pipeline import BatchSpec, DataPipeline
+from repro.storage.endpoint import build_demo_grid
+from repro.storage.faults import FaultInjector
+
+
+def _build(seed=0):
+    grid = build_demo_grid(8, 4, seed=seed)
+    grid.add_client("client://h0", zone="zone0")
+    man = ShardManifest("bench", 12, tokens_per_shard=100_000, vocab_size=50257, seed=seed)
+    materialize_on_grid(SyntheticCorpus(man), grid, replication=2)
+    pipe = DataPipeline("client://h0", 0, 1, grid, man, BatchSpec(8, 512), cache_shards=0)
+    # shards are ~400 KB; straggler detection watches per-chunk bandwidth,
+    # so use 64 KB chunks (≥6 chunks/transfer) like a WAN-tuned GridFTP
+    pipe.transfer.config.chunk_bytes = 64 << 10
+    return grid, man, pipe
+
+
+def _drain(pipe, n_batches=40):
+    it = pipe.batches(0)
+    for i, _ in enumerate(it):
+        if i >= n_batches:
+            break
+    secs = max(pipe.stats["fetch_seconds"], 1e-9)
+    return pipe.stats["bytes"] / secs / 1e6, pipe.stats
+
+
+def run():
+    rows = []
+
+    grid, man, pipe = _build()
+    mbps, stats = _drain(pipe)
+    rows.append(("pipeline_healthy_MBps", stats["fetch_seconds"] * 1e6 / max(stats["fetches"], 1), mbps))
+
+    # find the endpoint the broker actually prefers, then kill it
+    grid, man, pipe = _build()
+    used = pipe.broker.select(man.lfn(0))[0].pfn.endpoint
+    # flaky=1.0: alive at search time, fails at transfer time ⇒ true
+    # Access-Phase failover (a dead endpoint is filtered in Search)
+    FaultInjector(grid).flaky(used, 1.0)
+    mbps_f, stats_f = _drain(pipe)
+    rows.append(("pipeline_with_flaky_best_MBps", 0.0, mbps_f))
+    rows.append(("pipeline_failovers", 0.0, float(pipe.broker.stats["failovers"])))
+
+    grid, man, pipe = _build()
+    # warm local history first (≥3 observed transfers) so the broker can
+    # predict a baseline bandwidth, then degrade the preferred endpoint
+    # ⇒ observed ≪ predicted ⇒ mid-transfer switch
+    for s in range(4):
+        pipe.broker.fetch(man.lfn(s), pipe.transfer)
+    used = pipe.broker.select(man.lfn(1))[0].pfn.endpoint
+    FaultInjector(grid).degrade(used, 0.02)
+    pipe._cache.clear()
+    mbps_s, stats_s = _drain(pipe)
+    rows.append(("pipeline_with_straggler_best_MBps", 0.0, mbps_s))
+    rows.append(("pipeline_straggler_switches", 0.0, float(pipe.broker.stats["straggler_switches"])))
+    return rows

@@ -1,0 +1,77 @@
+"""Selection quality: broker policies vs naive baselines.
+
+The paper's criterion is "access speed" (§2.2). On a heterogeneous grid
+(zones, per-pair path fingerprints, diurnal load, noise), we fetch a
+replicated file repeatedly from one client under five policies:
+
+  random       — uniform replica choice (no information service)
+  round_robin  — rotate replicas
+  static       — rank by published diskTransferRate only (no history)
+  last         — rank by lastRDBandwidth (the paper's Figure-5 heuristic)
+  predicted    — rank by EWMA per-source history with static fallback
+                 (GridSelect default; the paper's §3.2 + NWS direction)
+
+Rows: (policy, µs/fetch *simulated*, derived = mean achieved MB/s).
+The paper's qualitative claim — history beats static, static beats blind —
+is checked by benchmarks/run.py (predicted ≥ random required).
+"""
+
+import numpy as np
+
+from repro.core.broker import default_read_request
+from repro.storage.endpoint import build_demo_grid
+
+N_FETCH = 60
+FILE_MB = 8
+
+
+def _run_policy(policy: str, seed: int) -> float:
+    grid = build_demo_grid(10, 5, seed=seed)
+    grid.add_client("client://host", zone="zone1")
+    data = b"x" * (FILE_MB << 20)
+    eps = grid.alive_endpoints()
+    grid.replicate("f", data, [eps[0], eps[3], eps[6], eps[9]])
+    broker = grid.broker_for("client://host")
+    xfer = grid.transfer_service()
+    replicas = grid.catalog.lookup("f")
+
+    bws = []
+    for i in range(N_FETCH):
+        if policy == "random":
+            rng = np.random.default_rng(seed * 1000 + i)
+            pfn = replicas[int(rng.integers(0, len(replicas)))]
+            payload, n, secs = xfer.read(pfn, "client://host")
+            bws.append(n / secs)
+        elif policy == "round_robin":
+            pfn = replicas[i % len(replicas)]
+            payload, n, secs = xfer.read(pfn, "client://host")
+            bws.append(n / secs)
+        else:
+            req = default_read_request("client://host", rank={
+                "static": "static", "last": "last", "predicted": "predicted",
+            }[policy])
+            out = broker.fetch("f", xfer, req, monitor_stragglers=False)
+            bws.append(out.bandwidth)
+    return float(np.mean(bws))
+
+
+def run():
+    rows = []
+    results = {}
+    for policy in ("random", "round_robin", "static", "last", "predicted"):
+        vals = [_run_policy(policy, seed) for seed in (1, 2, 3)]
+        mbps = np.mean(vals) / 1e6
+        results[policy] = mbps
+        per_fetch_us = FILE_MB * 1024 * 1024 / (mbps * 1e6) * 1e6
+        rows.append((f"selection_{policy}", per_fetch_us, mbps))
+    rows.append((
+        "selection_gain_predicted_vs_random",
+        0.0,
+        results["predicted"] / results["random"],
+    ))
+    rows.append((
+        "selection_gain_predicted_vs_static",
+        0.0,
+        results["predicted"] / results["static"],
+    ))
+    return rows

@@ -1,0 +1,86 @@
+"""Benchmark harness: one module per experimental axis of the paper.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement) and
+checks the paper's qualitative claims hold quantitatively:
+
+  * ClassAd matchmaking scales (columnar/kernel >= 10x interpreter @10k ads),
+  * LDIF->ClassAd conversion is cheap (§6),
+  * history-based selection beats blind/static selection (§3.2),
+  * the adaptive predictor has bounded regret vs the per-trace best (§7),
+  * the information plane's TTL caching pays (§3.1),
+  * the data plane survives failover/straggler injection.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only <prefix>]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run only benches whose module name contains this")
+    args = ap.parse_args()
+
+    from . import (
+        bench_gris,
+        bench_kernels,
+        bench_matchmaking,
+        bench_pipeline,
+        bench_predictors,
+        bench_selection_quality,
+    )
+
+    modules = {
+        "matchmaking": bench_matchmaking,
+        "selection_quality": bench_selection_quality,
+        "predictors": bench_predictors,
+        "gris": bench_gris,
+        "pipeline": bench_pipeline,
+        "kernels": bench_kernels,
+    }
+
+    rows = []
+    failures = []
+    for name, mod in modules.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows.extend(mod.run())
+        except Exception as e:  # pragma: no cover
+            failures.append((name, e))
+            traceback.print_exc()
+
+    print("name,us_per_call,derived")
+    derived = {}
+    for name, us, d in rows:
+        derived[name] = d
+        print(f"{name},{us:.2f},{d:.4f}")
+
+    # ---- claim checks (reported on stderr; nonzero exit on inversions) ----
+    checks = []
+    if "match_speedup_steady_vs_interp_s10000" in derived:
+        checks.append(("steady-state columnar >=10x interpreter @10k ads",
+                       derived["match_speedup_steady_vs_interp_s10000"] >= 10))
+    if "selection_gain_predicted_vs_random" in derived:
+        checks.append(("history-based selection beats random",
+                       derived["selection_gain_predicted_vs_random"] >= 1.0))
+    if "gris_ttl_cache_speedup" in derived:
+        checks.append(("GRIS TTL caching pays", derived["gris_ttl_cache_speedup"] >= 1.0))
+    for trace in ("diurnal", "noisy_stationary", "regime_shift"):
+        k = f"pred_adaptive_regret_{trace}"
+        if k in derived:
+            checks.append((f"adaptive regret bounded ({trace})", derived[k] <= 1.5))
+    if "pipeline_failovers" in derived:
+        checks.append(("pipeline survives endpoint death", derived["pipeline_failovers"] >= 0))
+
+    bad = [c for c, ok in checks if not ok]
+    for c, ok in checks:
+        print(f"# CHECK {'PASS' if ok else 'FAIL'}: {c}", file=sys.stderr)
+    if failures or bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

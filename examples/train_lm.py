@@ -1,0 +1,89 @@
+"""End-to-end training driver: a ~100M-param LM for a few hundred steps,
+every input shard fetched through the decentralized broker, with periodic
+grid-replicated checkpoints and fault injection mid-run.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is the deliverable-(b) driver. It uses mistral-nemo-12b's *family*
+at width 512 / 8 layers (~100M params incl. embeddings) — the full
+configs lower through `python -m repro.launch.dryrun`.
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_arch
+from repro.data.datasets import ShardManifest, SyntheticCorpus, materialize_on_grid
+from repro.data.pipeline import BatchSpec, DataPipeline
+from repro.storage.endpoint import build_demo_grid
+from repro.storage.faults import FaultEvent, FaultInjector
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.optim import AdamWConfig
+from repro.train.train_step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    # ~100M params: d=512, 8 layers, GQA 8/4, vocab 32768
+    base = get_arch("mistral-nemo-12b")
+    cfg = dataclasses.replace(
+        base, name="nemo-100m", n_layers=10, d_model=640, n_heads=10,
+        n_kv_heads=5, head_dim=64, d_ff=2048, vocab_size=32768, max_seq=4096,
+    )
+    n_params = cfg.param_counts()["total_with_emb"]
+    print(f"arch nemo-100m: {n_params/1e6:.1f}M params")
+
+    grid = build_demo_grid(8, 4, seed=0)
+    grid.add_client("client://trainer", zone="zone0")
+    man = ShardManifest("lm-corpus", 16, tokens_per_shard=200_000,
+                        vocab_size=cfg.vocab_size, seed=0)
+    materialize_on_grid(SyntheticCorpus(man), grid, replication=2)
+    print(f"materialized {man.n_shards} shards ×2 replicas on 8 endpoints")
+
+    pipe = DataPipeline("client://trainer", 0, 1, grid, man,
+                        BatchSpec(args.batch, args.seq))
+    broker = grid.broker_for("client://trainer")
+    ckpt = CheckpointManager("train-lm", grid, broker, replication=2,
+                             chunk_bytes=8 << 20)
+
+    inj = FaultInjector(grid)
+    inj.schedule_event(FaultEvent(5.0, "kill", "gsiftp://ep002"))
+    inj.schedule_event(FaultEvent(9.0, "degrade", "gsiftp://ep004", 0.05))
+    inj.schedule_event(FaultEvent(15.0, "heal", "gsiftp://ep002"))
+
+    tc = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        n_microbatches=2,
+        warmup_steps=max(args.steps // 20, 5),
+        total_steps=args.steps,
+    )
+    lc = LoopConfig(total_steps=args.steps, checkpoint_every=max(args.steps // 4, 25),
+                    log_every=max(args.steps // 15, 10), async_checkpoint=True,
+                    repair_every=max(args.steps // 2, 50))
+    loop = TrainLoop(cfg, tc, lc, pipe, ckpt, faults=inj)
+    loop.run()
+
+    losses = loop.losses()
+    print("\n".join(loop.events[-12:]))
+    print(f"\nloss: {losses[0]:.3f} → {np.mean(losses[-10:]):.3f} over {len(losses)} steps")
+    print(f"pipeline: {pipe.stats}")
+    print(f"broker:   {broker.stats}")
+    print(f"ckpt:     {ckpt.stats}; latest step {ckpt.latest_step()}")
+    assert np.mean(losses[-10:]) < losses[0] - 0.5, "training must make progress"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Checkpoint replica placement: write-side matchmaking.
+
+Placement is the write-direction instance of the paper's selection
+problem: for each checkpoint chunk, choose K endpoints that (a) admit the
+write under their published policy (``other.reqdSpace``), (b) have the
+space, and (c) rank best by predicted write bandwidth / free space — via
+``DataBroker.select_placements`` (the same two-sided ClassAd match).
+
+Zone anti-affinity is layered on top: replicas of one chunk prefer
+distinct zones, so a zone (pod) outage cannot take out every copy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.broker import DataBroker, RankedReplica
+from repro.storage.endpoint import DataGrid
+
+__all__ = ["PlacementPlan", "plan_placement"]
+
+
+@dataclass
+class PlacementPlan:
+    targets: List[str]  # endpoint URLs, best first
+    ranked: List[RankedReplica]
+    zones: List[str]
+
+
+def plan_placement(
+    broker: DataBroker,
+    grid: DataGrid,
+    nbytes: int,
+    *,
+    k: int = 2,
+    anti_affinity: bool = True,
+) -> PlacementPlan:
+    endpoints = grid.alive_endpoints()
+    ranked = broker.select_placements(nbytes, endpoints, k=len(endpoints))
+    targets: List[str] = []
+    zones: List[str] = []
+    for rr in ranked:
+        ep = rr.pfn.endpoint
+        zone = grid.topology.zone_of(ep)
+        if anti_affinity and zone in zones and len(zones) < len(set(
+            grid.topology.zone_of(e) for e in endpoints
+        )):
+            continue
+        targets.append(ep)
+        zones.append(zone)
+        if len(targets) == k:
+            break
+    # relax anti-affinity if we ran short
+    if len(targets) < k:
+        for rr in ranked:
+            if rr.pfn.endpoint not in targets:
+                targets.append(rr.pfn.endpoint)
+                zones.append(grid.topology.zone_of(rr.pfn.endpoint))
+                if len(targets) == k:
+                    break
+    return PlacementPlan(targets, ranked[:k], zones)

@@ -1,0 +1,46 @@
+"""Restore-time helpers: resuming a run on whatever mesh survives.
+
+``resume_or_init`` is the launcher's single entry point: restore the
+latest checkpoint if one exists (into the *current* mesh via the policy's
+specs), else initialize fresh. It also re-derives the TrainState step so
+schedules continue exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .manager import CheckpointManager
+
+__all__ = ["resume_or_init"]
+
+
+def resume_or_init(
+    manager: CheckpointManager,
+    init_fn: Callable[[], Any],
+    *,
+    mesh=None,
+    spec_fn: Optional[Callable] = None,
+) -> Tuple[Any, int, bool]:
+    """→ (state, start_step, resumed)."""
+    step = manager.latest_step()
+    if step is None:
+        state = init_fn()
+        if mesh is not None and spec_fn is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.parallel.sharding import _path_str
+
+            state = jax.tree_util.tree_map_with_path(
+                lambda path, leaf: jax.device_put(
+                    leaf, NamedSharding(mesh, spec_fn(_path_str(path), tuple(leaf.shape)))
+                ),
+                state,
+            )
+        return state, 0, False
+    template = jax.eval_shape(init_fn)
+    state = manager.restore(step, template, mesh=mesh, spec_fn=spec_fn)
+    return state, step, True

@@ -1,0 +1,286 @@
+"""Architecture configuration system + registry.
+
+One :class:`ArchConfig` describes everything the model stack, sharding
+policy, dry-run and smoke tests need about an architecture. Each assigned
+architecture contributes one module in this package registering its exact
+published configuration; ``reduced()`` derives the CPU-smoke variant
+(same family/topology, tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "MoEConfig",
+    "SSMConfig",
+    "ArchConfig",
+    "register",
+    "get_arch",
+    "list_archs",
+    "INPUT_SHAPES",
+    "ShapeSpec",
+]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    every_k_layers: int = 1  # MoE on layers where (layer % every_k) == moe_offset
+    moe_offset: int = 1
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    # transformer backbone
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # layer flavour
+    activation: str = "silu"  # silu | gelu | relu2
+    glu: bool = True  # gated MLP (llama-style)
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    positional: str = "rope"  # rope | learned | sinusoidal | none
+    tie_embeddings: bool = False
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None  # SWA window (h2o-danube)
+    logit_softcap: Optional[float] = None
+    # mixture of experts
+    moe: Optional[MoEConfig] = None
+    # state-space layers
+    ssm: Optional[SSMConfig] = None
+    # hybrid stacking: one period of layer kinds ('a'=attention, 'm'=mamba),
+    # tiled to n_layers. None ⇒ all 'a' (or all 'm' for family=ssm).
+    layer_pattern: Optional[Tuple[str, ...]] = None
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500  # encoder frames (whisper 30 s @ 50 Hz)
+    # vlm
+    n_patches: int = 2880  # anyres patch budget (llava-next)
+    # numerics / training
+    dtype: str = "bfloat16"
+    remat: str = "block"  # none | block | full
+    max_seq: int = 131072
+    notes: str = ""
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer kind string of length n_layers."""
+        if self.layer_pattern is None:
+            kind = "m" if self.family == "ssm" else "a"
+            return tuple(kind for _ in range(self.n_layers))
+        period = len(self.layer_pattern)
+        assert self.n_layers % period == 0, (self.n_layers, period)
+        return tuple(self.layer_pattern[i % period] for i in range(self.n_layers))
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return layer_idx % self.moe.every_k_layers == self.moe.moe_offset % self.moe.every_k_layers
+
+    # ---- parameter counting (roofline MODEL_FLOPS) -----------------------------
+    def param_counts(self) -> Dict[str, float]:
+        """Total and active parameter counts (embedding included/excluded)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        mlp_mult = 3 if self.glu else 2
+        dense_mlp = mlp_mult * d * self.d_ff if self.d_ff else 0
+        ssm_p = 0.0
+        if self.ssm is not None:
+            di = self.ssm.d_inner(d)
+            gn = self.ssm.n_groups * self.ssm.d_state
+            nh = self.ssm.n_heads(d)
+            in_proj = d * (2 * di + 2 * gn + nh)
+            ssm_p = in_proj + di * d + self.ssm.d_conv * (di + 2 * gn) + 2 * nh + di
+        total = 0.0
+        active = 0.0
+        for i, kind in enumerate(self.layer_kinds()):
+            if kind == "a":
+                total += attn
+                active += attn
+            else:
+                total += ssm_p
+                active += ssm_p
+            if self.is_moe_layer(i):
+                m = self.moe
+                expert = mlp_mult * d * m.d_ff_expert
+                total += m.n_experts * expert + d * m.n_experts
+                active += m.top_k * expert + d * m.n_experts
+            elif self.d_ff:
+                total += dense_mlp
+                active += dense_mlp
+        # encoder stack (whisper): attn + cross-attn + mlp per enc layer
+        if self.enc_dec:
+            enc = (attn + dense_mlp) * self.n_enc_layers
+            cross = attn * self.n_layers  # decoder cross-attention
+            total += enc + cross
+            active += enc + cross
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        norms = 2 * d * self.n_layers
+        return {
+            "total": total + norms,
+            "active": active + norms,
+            "embedding": emb,
+            "total_with_emb": total + norms + emb,
+        }
+
+    def model_flops_per_token(self) -> float:
+        """6·N_active (dense fwd+bwd rule of thumb), embeddings excluded."""
+        return 6.0 * self.param_counts()["active"]
+
+    # ---- reductions --------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        period = len(self.layer_pattern) if self.layer_pattern else 1
+        n_layers = max(2 * period, 2)
+        if self.enc_dec:
+            n_layers = 2
+        kv = min(self.n_kv_heads, 2) if self.n_kv_heads > 1 else 1
+        heads = max(4, kv)
+        moe = None
+        if self.moe:
+            moe = replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64,
+            )
+        ssm = None
+        if self.ssm:
+            ssm = replace(self.ssm, d_state=16, head_dim=16, chunk=32)
+        return replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=512,
+            moe=moe,
+            ssm=ssm,
+            n_enc_layers=2 if self.enc_dec else 0,
+            enc_seq=32,
+            n_patches=8,
+            sliding_window=16 if self.sliding_window else None,
+            max_seq=512,
+            dtype="float32",  # CPU smoke: exact decode==forward checks
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the assigned 4-shape set for LM-family archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from importlib import import_module
+
+    for mod in (
+        "granite_20b",
+        "mistral_nemo_12b",
+        "nemotron_4_340b",
+        "h2o_danube3_4b",
+        "jamba_v01_52b",
+        "granite_moe_3b_a800m",
+        "moonshot_v1_16b_a3b",
+        "llava_next_34b",
+        "whisper_base",
+        "mamba2_130m",
+    ):
+        import_module(f"repro.configs.{mod}")

@@ -1,0 +1,22 @@
+"""granite-20b — dense code LM, llama-arch with MQA (kv=1).
+
+52L, d_model=6144, 48 heads (GQA kv=1 ⇒ multi-query), d_ff=24576,
+vocab=49152. [arXiv:2405.04324; hf]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    activation="gelu",
+    glu=False,  # GPT-BigCode-style 4x MLP (matches the 20B param count)
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    notes="code LM; multi-query attention (single KV head)",
+))

@@ -1,0 +1,25 @@
+"""granite-moe-3b-a800m — fine-grained MoE, 40 experts top-8.
+
+32L, d_model=1536, 24 heads / 8 KV heads, expert d_ff=512, vocab=49155.
+[hf:ibm-granite/granite-3.0-1b-a400m-base (family); hf]
+"""
+from .base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,            # per-expert FFN width
+    vocab_size=49155,
+    activation="silu",
+    glu=True,
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff_expert=512,
+                  every_k_layers=1, moe_offset=0),
+    notes="every layer MoE; fine-grained small experts",
+))

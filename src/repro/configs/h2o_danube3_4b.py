@@ -1,0 +1,23 @@
+"""h2o-danube-3-4b — dense LM, llama+mistral mix with sliding-window attention.
+
+24L, d_model=3840, 32 heads / 8 KV heads, d_ff=10240, vocab=32000.
+[arXiv:2401.16818; unverified]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="h2o-danube3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab_size=32000,
+    activation="silu",
+    glu=True,
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    sliding_window=4096,  # SWA ⇒ bounded KV ⇒ runs long_500k
+    notes="sliding-window attention; sub-quadratic decode",
+))

@@ -1,0 +1,32 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention (1:7) with interleaved MoE.
+
+32L, d_model=4096, 32 heads / 8 KV heads, d_ff=14336, vocab=65536,
+MoE 16 experts top-2 on every other layer; attention once per 8 layers
+(offset 4). [arXiv:2403.19887; hf]
+"""
+from .base import ArchConfig, MoEConfig, SSMConfig, register
+
+# period of 8: mamba everywhere except slot 4 (HF: attn_layer_period=8,
+# attn_layer_offset=4)
+_PATTERN = tuple("a" if i == 4 else "m" for i in range(8))
+
+CONFIG = register(ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    activation="silu",
+    glu=True,
+    norm="rmsnorm",
+    positional="none",  # Jamba uses no positional encoding
+    layer_pattern=_PATTERN,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=14336,
+                  every_k_layers=2, moe_offset=1),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, chunk=256),
+    notes="paper uses Mamba-1 blocks; we lower both hybrid+ssm archs "
+          "through the SSD (Mamba-2) formulation (DESIGN.md §5)",
+))

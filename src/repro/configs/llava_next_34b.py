@@ -1,0 +1,25 @@
+"""llava-next-34b — VLM backbone (anyres tiling frontend stubbed).
+
+60L, d_model=7168, 56 heads / 8 KV heads, d_ff=20480, vocab=64000.
+Modality frontend is a STUB: ``input_specs()`` supplies precomputed patch
+embeddings spliced ahead of the text embeddings.
+[hf:llava-hf/llava-v1.6 (family); unverified]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    activation="silu",
+    glu=True,
+    norm="rmsnorm",
+    rope_theta=5000000.0,
+    n_patches=2880,  # anyres budget
+    notes="Yi-34B-style backbone; patch embeddings precomputed",
+))

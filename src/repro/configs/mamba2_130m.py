@@ -1,0 +1,21 @@
+"""mamba2-130m — pure SSM (state-space duality), attention-free.
+
+24L, d_model=768, ssm_state=128, vocab=50280. [arXiv:2405.21060]
+"""
+from .base import ArchConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=1,            # attention-free; unused
+    n_kv_heads=1,
+    d_ff=0,               # no MLP blocks in mamba2
+    vocab_size=50280,
+    norm="rmsnorm",
+    positional="none",
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    notes="SSD chunked scan; O(1) decode state ⇒ runs long_500k",
+))

@@ -1,0 +1,24 @@
+"""mistral-nemo-12b — dense LM, GQA kv=8, explicit head_dim=128, 128k ctx.
+
+40L, d_model=5120, 32 heads / 8 KV heads, d_ff=14336, vocab=131072.
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mistral-nemo-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,  # decoupled from d_model/n_heads (=160) per the HF config
+    d_ff=14336,
+    vocab_size=131072,
+    activation="silu",
+    glu=True,
+    norm="rmsnorm",
+    rope_theta=1000000.0,
+    max_seq=131072,
+    notes="128k context; tekken tokenizer vocab",
+))

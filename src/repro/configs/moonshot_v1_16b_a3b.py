@@ -1,0 +1,24 @@
+"""moonshot-v1-16b-a3b — MoE LM (kimi/moonlight style), 64 experts top-6.
+
+48L, d_model=2048, 16 heads (kv=16 ⇒ MHA), expert d_ff=1408, vocab=163840.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+"""
+from .base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,           # per-expert FFN width
+    vocab_size=163840,
+    activation="silu",
+    glu=True,
+    norm="rmsnorm",
+    rope_theta=50000.0,
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408,
+                  every_k_layers=1, moe_offset=0),
+    notes="every layer MoE; large vocab",
+))

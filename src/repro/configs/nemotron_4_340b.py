@@ -1,0 +1,23 @@
+"""nemotron-4-340b — dense LM, GQA kv=8, squared-ReLU MLP.
+
+96L, d_model=18432, 96 heads / 8 KV heads, d_ff=73728, vocab=256000.
+[arXiv:2402.16819; unverified]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    activation="relu2",  # squared ReLU
+    glu=False,
+    norm="layernorm",
+    rope_theta=10000.0,
+    remat="nested",  # two-level √L remat: 96 residual saves do not fit v5e
+    notes="squared-ReLU non-gated MLP; the 340B memory stress test",
+))

@@ -1,0 +1,27 @@
+"""whisper-base — encoder-decoder audio backbone (conv frontend stubbed).
+
+6 encoder + 6 decoder layers, d_model=512, 8 heads, d_ff=2048,
+vocab=51865. The conv frontend is a STUB: ``input_specs()`` supplies
+precomputed frame embeddings (1500 frames = 30 s). [arXiv:2212.04356]
+"""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,           # decoder layers
+    n_enc_layers=6,
+    enc_dec=True,
+    enc_seq=1500,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    activation="gelu",
+    glu=False,
+    norm="layernorm",
+    positional="learned",
+    qkv_bias=True,
+    notes="enc-dec; decode shapes run (decoder KV + cross-attn cache)",
+))

@@ -1,0 +1,226 @@
+"""Transfer instrumentation and bandwidth statistics (§3.2).
+
+"Storage systems are configured to provide information on their own
+behavior and performance... We gather this performance data by using
+instrumentation incorporated in the GridFTP server."
+
+The :class:`TransferMonitor` is that instrumentation: every transfer in or
+out of a storage endpoint is observed, accumulated into
+
+  * an aggregate summary (Figure 4: Max/Min/Avg RD/WR bandwidth, plus the
+    std-dev extension the paper suggests), and
+  * per-source end-to-end series (Figure 5: last RD/WR bandwidth + URL,
+    plus the predictor extensions of §7),
+
+and *published* into the endpoint's Storage GRIS, from which any broker
+can read it. History rings are bounded (``window``); the vectorized
+fleet-scale path (``kernels/bwstats``) consumes the same rings as arrays.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .gris import StorageGRIS
+from .predictors import AdaptivePredictor, Ewma, Predictor, RunningMean, SlidingMedian
+
+__all__ = ["TransferRecord", "SeriesStats", "TransferMonitor"]
+
+
+@dataclass(frozen=True)
+class TransferRecord:
+    """One observed transfer, as the GridFTP hook reports it."""
+
+    direction: str  # 'read' (replica -> client) | 'write' (client -> replica)
+    peer_url: str  # the far end (the paper's per-"source" key)
+    nbytes: int
+    seconds: float
+    started_at: float
+
+    @property
+    def bandwidth(self) -> float:
+        return self.nbytes / self.seconds if self.seconds > 0 else 0.0
+
+
+class SeriesStats:
+    """Streaming stats + bounded history for one (direction, peer) series."""
+
+    def __init__(self, window: int = 64):
+        self.window = window
+        self.history: Deque[float] = deque(maxlen=window)
+        self.n = 0
+        self.min = math.inf
+        self.max = -math.inf
+        self._mean = 0.0
+        self._m2 = 0.0
+        self.last = 0.0
+        self.last_url = ""
+        self.ewma = Ewma(0.25)
+        self.median = SlidingMedian(16)
+        self.adaptive = AdaptivePredictor()
+
+    def update(self, bw: float, url: str) -> None:
+        self.n += 1
+        self.history.append(bw)
+        self.min = min(self.min, bw)
+        self.max = max(self.max, bw)
+        d = bw - self._mean
+        self._mean += d / self.n
+        self._m2 += d * (bw - self._mean)
+        self.last = bw
+        self.last_url = url
+        self.ewma.update(bw)
+        self.median.update(bw)
+        self.adaptive.update(bw)
+
+    @property
+    def mean(self) -> float:
+        return self._mean if self.n else 0.0
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self._m2 / self.n) if self.n > 1 else 0.0
+
+    def as_array(self) -> np.ndarray:
+        return np.asarray(self.history, dtype=np.float32)
+
+
+class TransferMonitor:
+    """Per-endpoint transfer instrumentation, publishing into a GRIS.
+
+    Parameters
+    ----------
+    gris:
+        The endpoint's Storage GRIS; summary and per-source entries are
+        (re)published after every observation — mirroring how the paper's
+        FTP-server hooks feed the information service.
+    window:
+        History ring length per series.
+    """
+
+    def __init__(self, gris: Optional[StorageGRIS] = None, *, window: int = 64):
+        self.gris = gris
+        self.window = window
+        # aggregate over ALL transfers, by direction
+        self.aggregate: Dict[str, SeriesStats] = {
+            "read": SeriesStats(window),
+            "write": SeriesStats(window),
+        }
+        # per-peer end-to-end series, by direction
+        self.per_source: Dict[str, Dict[str, SeriesStats]] = {}
+        self.records: List[TransferRecord] = []
+        self.max_records = 4096
+
+    # -- observation ---------------------------------------------------------
+    def observe(self, rec: TransferRecord) -> None:
+        if rec.direction not in ("read", "write"):
+            raise ValueError(f"direction must be read|write, got {rec.direction!r}")
+        bw = rec.bandwidth
+        self.aggregate[rec.direction].update(bw, rec.peer_url)
+        per = self.per_source.setdefault(rec.peer_url, {})
+        if rec.direction not in per:
+            per[rec.direction] = SeriesStats(self.window)
+        per[rec.direction].update(bw, rec.peer_url)
+        self.records.append(rec)
+        if len(self.records) > self.max_records:
+            self.records = self.records[-self.max_records :]
+        if self.gris is not None:
+            self._publish(rec.peer_url)
+
+    def observe_transfer(
+        self, direction: str, peer_url: str, nbytes: int, seconds: float, now: float = 0.0
+    ) -> None:
+        self.observe(TransferRecord(direction, peer_url, nbytes, seconds, now))
+
+    # -- publication (Figures 4 & 5) ----------------------------------------
+    def summary_attrs(self) -> Dict[str, float]:
+        rd, wr = self.aggregate["read"], self.aggregate["write"]
+        return {
+            "MaxRDBandwidth": _finite(rd.max),
+            "MinRDBandwidth": _finite(rd.min),
+            "AvgRDBandwidth": rd.mean,
+            "MaxWRBandwidth": _finite(wr.max),
+            "MinWRBandwidth": _finite(wr.min),
+            "AvgWRBandwidth": wr.mean,
+            "StdRDBandwidth": rd.std,
+            "StdWRBandwidth": wr.std,
+            "nRDSamples": float(rd.n),
+            "nWRSamples": float(wr.n),
+        }
+
+    def source_attrs(self, peer_url: str) -> Dict[str, object]:
+        per = self.per_source.get(peer_url, {})
+        rd = per.get("read")
+        wr = per.get("write")
+        attrs: Dict[str, object] = {
+            "lastRDBandwidth": rd.last if rd else 0.0,
+            "lastRDurl": rd.last_url if rd else "",
+            "lastWRBandwidth": wr.last if wr else 0.0,
+            "lastWRurl": wr.last_url if wr else "",
+            "nSamplesToSource": float((rd.n if rd else 0) + (wr.n if wr else 0)),
+        }
+        if rd:
+            attrs["AvgRDBandwidthToSource"] = rd.mean
+            ew = rd.ewma.predict()
+            attrs["EwmaRDBandwidthToSource"] = ew if ew is not None else 0.0
+            md = rd.median.predict()
+            attrs["MedianRDBandwidthToSource"] = md if md is not None else 0.0
+        if wr:
+            attrs["AvgWRBandwidthToSource"] = wr.mean
+        return attrs
+
+    def _publish(self, peer_url: str) -> None:
+        assert self.gris is not None
+        self.gris.publish_bandwidth_summary(self.summary_attrs())
+        self.gris.publish_source_bandwidth(peer_url, self.source_attrs(peer_url))
+
+    def republish_all(self) -> None:
+        if self.gris is None:
+            return
+        self.gris.publish_bandwidth_summary(self.summary_attrs())
+        for peer in self.per_source:
+            self.gris.publish_source_bandwidth(peer, self.source_attrs(peer))
+
+    # -- prediction -------------------------------------------------------------
+    def predict_bandwidth(
+        self, direction: str, peer_url: str, *, kind: str = "adaptive"
+    ) -> Optional[float]:
+        """Predict end-to-end bandwidth to ``peer_url``; falls back to the
+        aggregate when the per-source series is empty (a new client pairs
+        with the site-wide summary, per §3.2's 'simple heuristic')."""
+        per = self.per_source.get(peer_url, {}).get(direction)
+        series = per if per and per.n else self.aggregate[direction]
+        if not series.n:
+            return None
+        if kind == "last":
+            return series.last
+        if kind == "mean":
+            return series.mean
+        if kind == "ewma":
+            return series.ewma.predict()
+        if kind == "median":
+            return series.median.predict()
+        return series.adaptive.predict()
+
+    # -- fleet-scale export (for kernels/bwstats) --------------------------------
+    def history_matrix(self, direction: str = "read") -> Tuple[np.ndarray, np.ndarray, List[str]]:
+        """Stack per-source histories into ``[N, W]`` (right-aligned, zero-
+        padded) + valid-count vector — the bwstats kernel input layout."""
+        peers = sorted(p for p, d in self.per_source.items() if direction in d)
+        n, w = len(peers), self.window
+        mat = np.zeros((n, w), dtype=np.float32)
+        counts = np.zeros((n,), dtype=np.int32)
+        for i, p in enumerate(peers):
+            h = self.per_source[p][direction].as_array()
+            mat[i, : len(h)] = h
+            counts[i] = len(h)
+        return mat, counts, peers
+
+
+def _finite(x: float) -> float:
+    return x if math.isfinite(x) else 0.0

@@ -1,0 +1,429 @@
+"""The decentralized storage broker (§5.1) — the paper's main artifact.
+
+"The entity that identifies the suitable instance of a replicated file
+based on application requirements is referred to as a broker."
+
+Every client that needs a replica runs its *own* broker instance (§5.1.1:
+"we have designed a decentralized storage brokering strategy wherein every
+client that requires access to a replica performs the selection process").
+There is no shared mutable state between brokers: each works from the
+replica catalog and the *published* GRIS/GIIS state, so two clients with
+the same view reach the same (deterministic) decision.
+
+The broker executes the three phases of §5.1.2:
+
+  Search — catalog lookup for all replicas of the logical file, then a
+      per-replica GRIS LDAP query projected to the attributes the request
+      references (the broker "uses the application ClassAd to build
+      specialized LDAP search queries"), narrowed to this client's own
+      per-source bandwidth child.
+  Match — LDIF → ClassAds (``ldif.entry_to_classad``), symmetric
+      Condor matchmaking against the request ad, rank-ordering. Either the
+      faithful interpreted matchmaker or the vectorized columnar engine
+      (``core.compile``) can run this phase; both produce identical
+      selections (tested).
+  Access — fetch through an injected transfer service, with two
+      fault-tolerance behaviours layered on the paper's design:
+      *failover* (endpoint refused/died → next-ranked replica) and
+      *straggler mitigation* (observed mid-transfer bandwidth below
+      ``straggler_factor ×`` predicted → abandon and re-select).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
+
+from .bandwidth import TransferMonitor
+from .catalog import PhysicalFile, ReplicaCatalog
+from .classads import ClassAd, parse as parse_expr
+from .gris import Clock, StorageGRIS
+from .ldif import Entry, entry_to_classad
+from .matchmaker import Matchmaker, MatchResult
+
+__all__ = [
+    "ReplicaView",
+    "RankedReplica",
+    "FetchOutcome",
+    "TransferService",
+    "BrokerError",
+    "NoReplicaError",
+    "NoMatchError",
+    "DataBroker",
+    "default_read_request",
+    "default_write_request",
+]
+
+
+class BrokerError(RuntimeError):
+    pass
+
+
+class NoReplicaError(BrokerError):
+    """The catalog has no replicas for the logical file."""
+
+
+class NoMatchError(BrokerError):
+    """Replicas exist but none satisfied the two-sided requirements."""
+
+
+@dataclass
+class ReplicaView:
+    """Search-phase product: a replica plus its GRIS-published state."""
+
+    pfn: PhysicalFile
+    entry: Entry  # flattened GRIS view (volume + bw summary + per-source)
+    ad: ClassAd  # the converted ClassAd (Match Phase step 1)
+
+
+@dataclass
+class RankedReplica:
+    """Match-phase product: a matched replica with its rank value."""
+
+    view: ReplicaView
+    rank: float
+
+    @property
+    def pfn(self) -> PhysicalFile:
+        return self.view.pfn
+
+
+@dataclass
+class FetchOutcome:
+    """Access-phase product."""
+
+    lfn: str
+    replica: PhysicalFile
+    nbytes: int
+    seconds: float
+    attempts: int
+    switched: int  # straggler-mitigation replica switches
+    ranked: List[RankedReplica]
+    payload: Any = None
+
+    @property
+    def bandwidth(self) -> float:
+        return self.nbytes / self.seconds if self.seconds > 0 else 0.0
+
+
+class TransferService(Protocol):
+    """What the Access Phase needs from the storage layer (GridFTP stand-in).
+
+    ``read`` returns (payload, nbytes, seconds); it may raise
+    ``TransferFailure`` (endpoint dead / refused). ``read_chunks`` yields
+    ``(chunk_bytes, chunk_seconds)`` increments for straggler monitoring.
+    """
+
+    def read(self, replica: PhysicalFile, client_url: str) -> Tuple[Any, int, float]: ...
+
+    def read_chunks(self, replica: PhysicalFile, client_url: str): ...
+
+
+def default_read_request(
+    client_url: str,
+    *,
+    min_bandwidth: float = 0.0,
+    rank: str = "predicted",
+) -> ClassAd:
+    """The request ad a data-pipeline client submits for a shard read.
+
+    Rank prefers this client's own end-to-end history (Figure 5's
+    per-source attributes), falling back to the site-wide average
+    (Figure 4), falling back to the static ``diskTransferRate`` for a
+    cold-start endpoint — the paper's "simple heuristic of combining past
+    observed performance with current load".
+    """
+    ad = ClassAd()
+    ad["clientUrl"] = client_url
+    ad["reqdRDBandwidth"] = float(min_bandwidth)
+    # Reads consume no space; declared so that space-gating site policies
+    # (e.g. the paper's ``other.reqdSpace < 10G``) evaluate defined-True.
+    ad["reqdSpace"] = 0
+    if rank == "predicted":
+        ad.set_expr(
+            "rank",
+            "ifThenElse(!isUndefined(other.EwmaRDBandwidthToSource) && other.EwmaRDBandwidthToSource > 0,"
+            " other.EwmaRDBandwidthToSource,"
+            " ifThenElse(!isUndefined(other.AvgRDBandwidth) && other.AvgRDBandwidth > 0,"
+            "  other.AvgRDBandwidth,"
+            "  other.diskTransferRate / (1 + other.loadFactor)))",
+        )
+    elif rank == "last":
+        ad.set_expr("rank", "other.lastRDBandwidth")
+    elif rank == "static":
+        ad.set_expr("rank", "other.diskTransferRate / (1 + other.loadFactor)")
+    else:
+        ad.set_expr("rank", rank)  # caller-supplied expression
+    ad.set_expr(
+        "requirements",
+        "isUndefined(other.MaxRDBandwidth) || my.reqdRDBandwidth <= 0"
+        " || other.MaxRDBandwidth >= my.reqdRDBandwidth",
+    )
+    return ad
+
+
+def default_write_request(client_url: str, nbytes: int) -> ClassAd:
+    """The request ad a checkpoint writer submits for replica placement:
+    needs space, ranks by predicted write bandwidth then free space."""
+    ad = ClassAd()
+    ad["clientUrl"] = client_url
+    ad["reqdSpace"] = int(nbytes)
+    ad.set_expr(
+        "rank",
+        "ifThenElse(!isUndefined(other.AvgWRBandwidthToSource) && other.AvgWRBandwidthToSource > 0,"
+        " other.AvgWRBandwidthToSource * 1000000000,"
+        " ifThenElse(!isUndefined(other.AvgWRBandwidth) && other.AvgWRBandwidth > 0,"
+        "  other.AvgWRBandwidth * 1000000000,"
+        "  other.diskTransferRate))"
+        " + other.availableSpace / 1G",
+    )
+    ad.set_expr("requirements", "other.availableSpace >= my.reqdSpace")
+    return ad
+
+
+class DataBroker:
+    """One client's replica-selection broker.
+
+    Parameters
+    ----------
+    client_url:
+        This client's URL — the per-source key under which endpoints have
+        recorded end-to-end history about us.
+    catalog:
+        The replica catalog (read-only here).
+    gris_resolver:
+        endpoint URL → StorageGRIS. Usually ``grid.gris_for`` from the
+        storage simulation, or a GIIS lookup.
+    env:
+        ClassAd evaluation environment (deterministic ``now`` etc.).
+    use_vectorized:
+        Route the Match Phase through the columnar engine
+        (:mod:`repro.core.compile`) when the request compiles; falls back
+        to the interpreter otherwise. Selections are identical.
+    """
+
+    def __init__(
+        self,
+        client_url: str,
+        catalog: ReplicaCatalog,
+        gris_resolver: Callable[[str], Optional[StorageGRIS]],
+        *,
+        env: Optional[Dict[str, Any]] = None,
+        clock: Optional[Clock] = None,
+        use_vectorized: bool = False,
+        straggler_factor: float = 0.35,
+        straggler_patience: int = 3,
+        max_attempts: int = 4,
+    ):
+        self.client_url = client_url
+        self.catalog = catalog
+        self.gris_resolver = gris_resolver
+        self.clock = clock or Clock()
+        self.env = dict(env or {})
+        self.env.setdefault("now", self.clock.now())
+        self.matchmaker = Matchmaker(self.env)
+        self.use_vectorized = use_vectorized
+        self.straggler_factor = straggler_factor
+        self.straggler_patience = straggler_patience
+        self.max_attempts = max_attempts
+        # local (client-side) observation history: end-to-end from OUR side
+        self.local_monitor = TransferMonitor(None)
+        # counters
+        self.stats = {
+            "searches": 0,
+            "matches": 0,
+            "fetches": 0,
+            "failovers": 0,
+            "straggler_switches": 0,
+            "vectorized_matches": 0,
+        }
+
+    # ------------------------------------------------------------------ Search
+    def search(self, lfn: str, attrs: Optional[Sequence[str]] = None) -> List[ReplicaView]:
+        """Search Phase: catalog → per-replica GRIS query → ClassAd views."""
+        self.stats["searches"] += 1
+        replicas = self.catalog.lookup(lfn)
+        if not replicas:
+            raise NoReplicaError(lfn)
+        views: List[ReplicaView] = []
+        for pfn in replicas:
+            gris = self.gris_resolver(pfn.endpoint)
+            if gris is None:
+                continue  # endpoint unreachable: skip (failover will cover)
+            entry = gris.flattened_view(source=self.client_url)
+            entry.setdefault("endpoint", pfn.endpoint)
+            entry.setdefault("replicaPath", pfn.path)
+            entry.setdefault("replicaSize", pfn.size)
+            ad = entry_to_classad(entry)
+            views.append(ReplicaView(pfn, entry, ad))
+        if not views:
+            raise NoReplicaError(f"{lfn}: no reachable replicas")
+        return views
+
+    # ------------------------------------------------------------------- Match
+    def match(self, request: ClassAd, views: Sequence[ReplicaView]) -> List[RankedReplica]:
+        """Match Phase: two-sided matchmaking + rank ordering."""
+        self.stats["matches"] += 1
+        if self.use_vectorized:
+            ranked = self._match_vectorized(request, views)
+            if ranked is not None:
+                self.stats["vectorized_matches"] += 1
+                return ranked
+        results = self.matchmaker.match(request, [v.ad for v in views])
+        return [RankedReplica(views[m.index], m.rank) for m in results]
+
+    def _match_vectorized(
+        self, request: ClassAd, views: Sequence[ReplicaView]
+    ) -> Optional[List[RankedReplica]]:
+        # deferred import: core.compile pulls in jax
+        try:
+            from .compile import vectorized_match
+        except Exception:  # pragma: no cover - jax always present here
+            return None
+        return vectorized_match(request, views, env=self.env)
+
+    def select(
+        self,
+        lfn: str,
+        request: Optional[ClassAd] = None,
+        *,
+        top_k: Optional[int] = None,
+    ) -> List[RankedReplica]:
+        """Search + Match in one call, best replica first."""
+        req = request if request is not None else default_read_request(self.client_url)
+        attrs = None
+        views = self.search(lfn, attrs)
+        ranked = self.match(req, views)
+        if not ranked:
+            raise NoMatchError(lfn)
+        return ranked[:top_k] if top_k else ranked
+
+    # ------------------------------------------------------------------ Access
+    def fetch(
+        self,
+        lfn: str,
+        transfer: TransferService,
+        request: Optional[ClassAd] = None,
+        *,
+        monitor_stragglers: bool = True,
+    ) -> FetchOutcome:
+        """Access Phase with failover and straggler mitigation.
+
+        Walks the ranked list; a failed endpoint advances to the next
+        (failover); a transfer whose observed chunk bandwidth stays below
+        ``straggler_factor × predicted`` for ``straggler_patience`` chunks
+        is abandoned mid-flight and the next replica is tried.
+        """
+        from repro.storage.transfer import TransferFailure  # cycle-free at runtime
+
+        ranked = self.select(lfn, request)
+        self.stats["fetches"] += 1
+        attempts = 0
+        switched = 0
+        errors: List[str] = []
+        abandoned: List[RankedReplica] = []  # straggler-abandoned, still alive
+        for rr in ranked:
+            if attempts >= self.max_attempts:
+                break
+            attempts += 1
+            # only trust `rank` as a bandwidth prediction when it comes from
+            # observed history; a cold static rank (disk rate) can exceed
+            # the achievable path bandwidth several-fold and would declare
+            # every healthy replica a straggler.
+            has_history = isinstance(
+                rr.view.entry.get("EwmaRDBandwidthToSource"), (int, float)
+            ) and rr.view.entry.get("EwmaRDBandwidthToSource", 0) > 0
+            if rr.rank > 0 and has_history:
+                predicted = rr.rank
+            else:
+                # cold endpoint: fall back to this client's own typical
+                # achieved bandwidth (local aggregate), if any
+                agg = self.local_monitor.aggregate["read"]
+                predicted = agg.mean if agg.n >= 3 else None
+            try:
+                if monitor_stragglers and predicted:
+                    result = self._monitored_read(transfer, rr, predicted)
+                    if result is None:  # straggler: try next replica
+                        switched += 1
+                        self.stats["straggler_switches"] += 1
+                        abandoned.append(rr)
+                        continue
+                    payload, nbytes, seconds = result
+                else:
+                    payload, nbytes, seconds = transfer.read(rr.pfn, self.client_url)
+            except TransferFailure as e:
+                errors.append(str(e))
+                self.stats["failovers"] += 1
+                continue
+            self.local_monitor.observe_transfer(
+                "read", rr.pfn.endpoint, nbytes, seconds, self.clock.now()
+            )
+            return FetchOutcome(lfn, rr.pfn, nbytes, seconds, attempts, switched, ranked, payload)
+        # Mitigation must never turn a working fetch into a failure: if the
+        # list was exhausted by straggler switches, take the best abandoned
+        # replica to completion without monitoring.
+        for rr in abandoned:
+            attempts += 1
+            try:
+                payload, nbytes, seconds = transfer.read(rr.pfn, self.client_url)
+            except TransferFailure as e:
+                errors.append(str(e))
+                continue
+            self.local_monitor.observe_transfer(
+                "read", rr.pfn.endpoint, nbytes, seconds, self.clock.now()
+            )
+            return FetchOutcome(lfn, rr.pfn, nbytes, seconds, attempts, switched, ranked, payload)
+        raise BrokerError(
+            f"all {attempts} attempt(s) to fetch {lfn!r} failed"
+            + (f": {errors}" if errors else "")
+        )
+
+    def _monitored_read(
+        self, transfer: TransferService, rr: RankedReplica, predicted: float
+    ) -> Optional[Tuple[Any, int, float]]:
+        """Chunked read with mid-transfer bandwidth watch. Returns None if
+        abandoned as a straggler."""
+        chunks: List[Any] = []
+        nbytes = 0
+        seconds = 0.0
+        slow = 0
+        for payload, cbytes, csecs in transfer.read_chunks(rr.pfn, self.client_url):
+            chunks.append(payload)
+            nbytes += cbytes
+            seconds += csecs
+            bw = cbytes / csecs if csecs > 0 else math.inf
+            if bw < self.straggler_factor * predicted:
+                slow += 1
+                if slow >= self.straggler_patience:
+                    return None
+            else:
+                slow = 0
+        merged = b"".join(c for c in chunks if isinstance(c, (bytes, bytearray))) if chunks and isinstance(chunks[0], (bytes, bytearray)) else chunks
+        return merged, nbytes, seconds
+
+    # -------------------------------------------------------------- placement
+    def select_placements(
+        self,
+        nbytes: int,
+        endpoints: Sequence[str],
+        *,
+        k: int = 2,
+        request: Optional[ClassAd] = None,
+    ) -> List[RankedReplica]:
+        """Write-side matchmaking: choose ``k`` placement targets for a new
+        replica of size ``nbytes`` (checkpoint placement uses this)."""
+        req = request if request is not None else default_write_request(self.client_url, nbytes)
+        views: List[ReplicaView] = []
+        for ep in endpoints:
+            gris = self.gris_resolver(ep)
+            if gris is None:
+                continue
+            entry = gris.flattened_view(source=self.client_url)
+            entry.setdefault("endpoint", ep)
+            pfn = PhysicalFile(ep, "", nbytes)
+            views.append(ReplicaView(pfn, entry, entry_to_classad(entry)))
+        ranked = self.match(req, views)
+        if len(ranked) < 1:
+            raise NoMatchError(f"no endpoint admits a {nbytes}-byte replica")
+        return ranked[:k]

@@ -1,0 +1,170 @@
+"""The Replica Catalog: logical file → physical replica locations (§2.2, §5).
+
+"A replica manager typically maintains a replica catalog containing
+replica site addresses and the file instances." The broker's Search Phase
+step 1 "queries the replica catalog, which contains addresses of all
+replicas for each logical file".
+
+The catalog maps a *logical file name* (LFN) to a set of *physical file
+names* (PFNs) — (endpoint URL, path, size, checksum). Logical collections
+group LFNs (the Globus replica catalog had collections; our data pipeline
+uses them for shard manifests, and the checkpoint manager for step
+manifests). The catalog is deliberately dumb: no selection logic lives
+here, only existence — selection is the broker's job.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = ["PhysicalFile", "LogicalFile", "ReplicaCatalog", "CatalogError"]
+
+
+class CatalogError(KeyError):
+    pass
+
+
+@dataclass(frozen=True)
+class PhysicalFile:
+    """One replica instance of a logical file."""
+
+    endpoint: str  # endpoint URL, e.g. "gsiftp://hugo.mcs.anl.gov"
+    path: str  # path at the endpoint, e.g. "/dev/sandbox/chunk-000017"
+    size: int  # bytes
+    checksum: Optional[str] = None  # content digest (integrity on restore)
+
+    @property
+    def url(self) -> str:
+        return f"{self.endpoint}{self.path}"
+
+
+@dataclass
+class LogicalFile:
+    lfn: str
+    replicas: List[PhysicalFile] = field(default_factory=list)
+    attributes: Dict[str, object] = field(default_factory=dict)  # app metadata
+
+
+class ReplicaCatalog:
+    """An in-memory replica catalog with collections.
+
+    Thread-safe: the async checkpoint writer registers replicas from a
+    background thread while the training loop reads.
+    """
+
+    def __init__(self):
+        self._files: Dict[str, LogicalFile] = {}
+        self._collections: Dict[str, List[str]] = {}
+        self._lock = threading.RLock()
+
+    # -- logical files -----------------------------------------------------
+    def create_logical(self, lfn: str, attributes: Optional[Mapping[str, object]] = None) -> None:
+        with self._lock:
+            if lfn not in self._files:
+                self._files[lfn] = LogicalFile(lfn)
+            if attributes:
+                self._files[lfn].attributes.update(attributes)
+
+    def register_replica(self, lfn: str, pfn: PhysicalFile) -> None:
+        """Add a replica instance; idempotent on (endpoint, path)."""
+        with self._lock:
+            self.create_logical(lfn)
+            lf = self._files[lfn]
+            for existing in lf.replicas:
+                if existing.endpoint == pfn.endpoint and existing.path == pfn.path:
+                    lf.replicas.remove(existing)
+                    break
+            lf.replicas.append(pfn)
+
+    def unregister_replica(self, lfn: str, endpoint: str, path: Optional[str] = None) -> int:
+        """Remove replicas at ``endpoint`` (optionally a specific path).
+        Returns the number removed. Used when an endpoint is declared dead."""
+        with self._lock:
+            lf = self._files.get(lfn)
+            if lf is None:
+                return 0
+            before = len(lf.replicas)
+            lf.replicas = [
+                r
+                for r in lf.replicas
+                if not (r.endpoint == endpoint and (path is None or r.path == path))
+            ]
+            return before - len(lf.replicas)
+
+    def unregister_endpoint(self, endpoint: str) -> int:
+        """Drop every replica hosted by ``endpoint`` (node death)."""
+        with self._lock:
+            n = 0
+            for lfn in list(self._files):
+                n += self.unregister_replica(lfn, endpoint)
+            return n
+
+    def lookup(self, lfn: str) -> List[PhysicalFile]:
+        """Search Phase step 1: all replica locations of a logical file."""
+        with self._lock:
+            lf = self._files.get(lfn)
+            if lf is None:
+                raise CatalogError(lfn)
+            return list(lf.replicas)
+
+    def attributes(self, lfn: str) -> Dict[str, object]:
+        with self._lock:
+            lf = self._files.get(lfn)
+            if lf is None:
+                raise CatalogError(lfn)
+            return dict(lf.attributes)
+
+    def exists(self, lfn: str) -> bool:
+        with self._lock:
+            return lfn in self._files
+
+    def logical_files(self) -> List[str]:
+        with self._lock:
+            return sorted(self._files)
+
+    # -- collections ----------------------------------------------------------
+    def create_collection(self, name: str, lfns: Optional[Iterable[str]] = None) -> None:
+        with self._lock:
+            self._collections.setdefault(name, [])
+            if lfns:
+                for lfn in lfns:
+                    self.add_to_collection(name, lfn)
+
+    def add_to_collection(self, name: str, lfn: str) -> None:
+        with self._lock:
+            self.create_logical(lfn)
+            coll = self._collections.setdefault(name, [])
+            if lfn not in coll:
+                coll.append(lfn)
+
+    def collection(self, name: str) -> List[str]:
+        with self._lock:
+            if name not in self._collections:
+                raise CatalogError(name)
+            return list(self._collections[name])
+
+    def collections(self) -> List[str]:
+        with self._lock:
+            return sorted(self._collections)
+
+    def drop_collection(self, name: str, *, drop_logical: bool = True) -> None:
+        """Remove a collection (and optionally its now-orphaned LFNs)."""
+        with self._lock:
+            lfns = self._collections.pop(name, [])
+            if drop_logical:
+                for lfn in lfns:
+                    lf = self._files.get(lfn)
+                    if lf is not None and not lf.replicas:
+                        del self._files[lfn]
+
+    # -- stats -------------------------------------------------------------
+    def replica_counts(self) -> Dict[str, int]:
+        with self._lock:
+            return {lfn: len(lf.replicas) for lfn, lf in self._files.items()}
+
+    def endpoints(self) -> List[str]:
+        with self._lock:
+            eps = {r.endpoint for lf in self._files.values() for r in lf.replicas}
+            return sorted(eps)

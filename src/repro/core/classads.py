@@ -1,0 +1,1306 @@
+"""Condor Classified Advertisements (ClassAds) for the storage context.
+
+This module implements the ClassAd expression language used by the paper
+("Replica Selection in the Globus Data Grid", Vazhkudai/Tuecke/Foster 2001,
+building on Raman/Livny/Solomon's matchmaking, HPDC-7 1998):
+
+  * a value model with the tri-state semantics of Condor ClassAds
+    (Undefined / Error propagate through operators with well-defined
+    absorption rules, e.g. ``False && Undefined == False``),
+  * a lexer + Pratt parser for the expression language, including the
+    unit-suffixed numeric literals used by the paper's example ads
+    (``50G``, ``75K``),
+  * an evaluator with ``MY``/``self`` and ``TARGET``/``other`` scoping inside
+    a MatchClassAd, the structure Condor builds when matching two ads,
+  * the ``ClassAd`` record type itself, with case-insensitive attribute
+    names and LDIF-friendly conversion hooks (see :mod:`repro.core.ldif`).
+
+The language is a principled subset of Condor's: everything exercised by
+the paper (two-sided ``requirements``, ``rank``, ``other.`` references,
+arithmetic/boolean/comparison operators) plus lists, nested ads, ternary,
+``=?=``/``=!=`` identity comparison and ~25 builtin functions. All builtins
+are deterministic (``time()`` reads an injected clock) so selection results
+are reproducible across hosts — a property the decentralized broker relies
+on when we test that independent clients reach identical decisions from
+identical published state.
+"""
+
+from __future__ import annotations
+
+import math
+import re as _re
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+__all__ = [
+    "Undefined",
+    "Error",
+    "ClassAd",
+    "MatchContext",
+    "Expr",
+    "Literal",
+    "AttrRef",
+    "UnaryOp",
+    "BinOp",
+    "Ternary",
+    "FuncCall",
+    "ListExpr",
+    "Select",
+    "Index",
+    "parse",
+    "parse_classad",
+    "evaluate",
+    "ClassAdSyntaxError",
+    "BUILTINS",
+    "UNIT_SUFFIXES",
+]
+
+
+# ---------------------------------------------------------------------------
+# Value model
+# ---------------------------------------------------------------------------
+
+
+class _Singleton:
+    """Base for the Undefined / Error sentinel values."""
+
+    _name = "singleton"
+
+    def __repr__(self) -> str:  # pragma: no cover - trivial
+        return self._name
+
+    def __bool__(self) -> bool:
+        raise TypeError(
+            f"ClassAd {self._name} has no Python truth value; "
+            "use classads semantics (evaluate) instead"
+        )
+
+
+class _Undefined(_Singleton):
+    _name = "undefined"
+
+
+class _Error(_Singleton):
+    _name = "error"
+
+
+#: The ClassAd ``undefined`` value: an attribute that is not present.
+Undefined = _Undefined()
+
+#: The ClassAd ``error`` value: a type error / division by zero / bad call.
+Error = _Error()
+
+# A ClassAd runtime value.
+Value = Union[bool, int, float, str, list, "_Undefined", "_Error", "ClassAd"]
+
+#: Unit suffixes accepted on numeric literals. The paper's example ads use
+#: ``50G`` and ``75K``; we follow storage convention (powers of 1024).
+UNIT_SUFFIXES = {"K": 1024, "M": 1024**2, "G": 1024**3, "T": 1024**4, "P": 1024**5}
+
+
+def is_undef(v: Value) -> bool:
+    return v is Undefined
+
+
+def is_error(v: Value) -> bool:
+    return v is Error
+
+
+def is_exceptional(v: Value) -> bool:
+    return v is Undefined or v is Error
+
+
+def _is_number(v: Value) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+# ---------------------------------------------------------------------------
+# AST
+# ---------------------------------------------------------------------------
+
+
+class Expr:
+    """Base class for ClassAd expression AST nodes."""
+
+    __slots__ = ()
+
+    def eval(self, ctx: "EvalContext") -> Value:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # Helper so users can write ``expr.evaluate(ad)`` directly.
+    def evaluate(
+        self,
+        ad: Optional["ClassAd"] = None,
+        other: Optional["ClassAd"] = None,
+        env: Optional[Dict[str, Value]] = None,
+    ) -> Value:
+        return evaluate(self, ad, other, env)
+
+
+@dataclass(frozen=True)
+class Literal(Expr):
+    value: Value
+
+    __slots__ = ("value",)
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        return self.value
+
+    def __repr__(self) -> str:
+        if isinstance(self.value, str):
+            return '"%s"' % self.value
+        return repr(self.value)
+
+
+@dataclass(frozen=True)
+class AttrRef(Expr):
+    """Attribute reference, possibly scoped: ``name``, ``other.name``, ``my.name``."""
+
+    scope: Optional[str]  # None | 'my' | 'other'  ('self'→'my', 'target'→'other')
+    name: str
+
+    __slots__ = ("scope", "name")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        return ctx.lookup(self.scope, self.name)
+
+    def __repr__(self) -> str:
+        return f"{self.scope}.{self.name}" if self.scope else self.name
+
+
+@dataclass(frozen=True)
+class UnaryOp(Expr):
+    op: str  # '-' | '+' | '!'
+    operand: Expr
+
+    __slots__ = ("op", "operand")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        v = self.operand.eval(ctx)
+        if self.op == "!":
+            if v is Undefined or v is Error:
+                return v
+            if isinstance(v, bool):
+                return not v
+            return Error
+        # numeric +/-
+        if v is Undefined or v is Error:
+            return v
+        if _is_number(v):
+            return -v if self.op == "-" else +v
+        return Error
+
+    def __repr__(self) -> str:
+        return f"{self.op}({self.operand!r})"
+
+
+_CMP_OPS = {"==", "!=", "<", "<=", ">", ">="}
+_ARITH_OPS = {"+", "-", "*", "/", "%"}
+
+
+@dataclass(frozen=True)
+class BinOp(Expr):
+    op: str
+    left: Expr
+    right: Expr
+
+    __slots__ = ("op", "left", "right")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        op = self.op
+        # --- short-circuiting boolean connectives (Condor absorption) ---
+        if op == "&&":
+            return _eval_and(self.left, self.right, ctx)
+        if op == "||":
+            return _eval_or(self.left, self.right, ctx)
+
+        l = self.left.eval(ctx)
+        r = self.right.eval(ctx)
+
+        # --- identity comparison: total, never Undefined/Error ---
+        if op == "=?=":
+            return _is_identical(l, r)
+        if op == "=!=":
+            return not _is_identical(l, r)
+
+        # --- strict propagation for everything else ---
+        if l is Error or r is Error:
+            return Error
+        if l is Undefined or r is Undefined:
+            return Undefined
+
+        if op in _CMP_OPS:
+            return _compare(op, l, r)
+        if op in _ARITH_OPS:
+            return _arith(op, l, r)
+        return Error  # pragma: no cover - parser emits only known ops
+
+    def __repr__(self) -> str:
+        return f"({self.left!r} {self.op} {self.right!r})"
+
+
+@dataclass(frozen=True)
+class Ternary(Expr):
+    cond: Expr
+    then: Expr
+    other: Expr
+
+    __slots__ = ("cond", "then", "other")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        c = self.cond.eval(ctx)
+        if c is Undefined or c is Error:
+            return c
+        if not isinstance(c, bool):
+            return Error
+        return self.then.eval(ctx) if c else self.other.eval(ctx)
+
+    def __repr__(self) -> str:
+        return f"({self.cond!r} ? {self.then!r} : {self.other!r})"
+
+
+@dataclass(frozen=True)
+class FuncCall(Expr):
+    name: str
+    args: Tuple[Expr, ...]
+
+    __slots__ = ("name", "args")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        fn = ctx.function(self.name)
+        if fn is None:
+            return Error
+        argv = [a.eval(ctx) for a in self.args]
+        try:
+            return fn(ctx, argv)
+        except _ClassAdError:
+            return Error
+        except Exception:
+            return Error
+
+    def __repr__(self) -> str:
+        return f"{self.name}({', '.join(map(repr, self.args))})"
+
+
+@dataclass(frozen=True)
+class ListExpr(Expr):
+    items: Tuple[Expr, ...]
+
+    __slots__ = ("items",)
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        return [item.eval(ctx) for item in self.items]
+
+    def __repr__(self) -> str:
+        return "{%s}" % ", ".join(map(repr, self.items))
+
+
+@dataclass(frozen=True)
+class Select(Expr):
+    """Attribute selection from a nested ClassAd value: ``expr.name``."""
+
+    base: Expr
+    name: str
+
+    __slots__ = ("base", "name")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        base = self.base.eval(ctx)
+        if base is Undefined or base is Error:
+            return base
+        if isinstance(base, ClassAd):
+            expr = base.lookup_expr(self.name)
+            if expr is None:
+                return Undefined
+            return expr.eval(ctx.rescope(base))
+        return Error
+
+    def __repr__(self) -> str:
+        return f"{self.base!r}.{self.name}"
+
+
+@dataclass(frozen=True)
+class Index(Expr):
+    base: Expr
+    index: Expr
+
+    __slots__ = ("base", "index")
+
+    def eval(self, ctx: "EvalContext") -> Value:
+        base = self.base.eval(ctx)
+        idx = self.index.eval(ctx)
+        if base is Error or idx is Error:
+            return Error
+        if base is Undefined or idx is Undefined:
+            return Undefined
+        if isinstance(base, list) and isinstance(idx, int) and not isinstance(idx, bool):
+            if 0 <= idx < len(base):
+                return base[idx]
+            return Error
+        return Error
+
+    def __repr__(self) -> str:
+        return f"{self.base!r}[{self.index!r}]"
+
+
+# ---------------------------------------------------------------------------
+# Operator semantics
+# ---------------------------------------------------------------------------
+
+
+def _eval_and(left: Expr, right: Expr, ctx: "EvalContext") -> Value:
+    l = left.eval(ctx)
+    if l is False:
+        return False
+    r = right.eval(ctx)
+    if r is False:
+        return False
+    if l is Error or r is Error:
+        return Error
+    if l is Undefined or r is Undefined:
+        return Undefined
+    if isinstance(l, bool) and isinstance(r, bool):
+        return True  # both are True here
+    return Error
+
+
+def _eval_or(left: Expr, right: Expr, ctx: "EvalContext") -> Value:
+    l = left.eval(ctx)
+    if l is True:
+        return True
+    r = right.eval(ctx)
+    if r is True:
+        return True
+    if l is Error or r is Error:
+        return Error
+    if l is Undefined or r is Undefined:
+        return Undefined
+    if isinstance(l, bool) and isinstance(r, bool):
+        return False
+    return Error
+
+
+def _is_identical(l: Value, r: Value) -> bool:
+    """``=?=``: identical-comparison, a total predicate (never U/E)."""
+    if l is Undefined or r is Undefined:
+        return l is r
+    if l is Error or r is Error:
+        return l is r
+    if isinstance(l, bool) != isinstance(r, bool):
+        return False
+    if _is_number(l) and _is_number(r):
+        # =?= requires same type in Condor; we compare value and int-ness.
+        return (isinstance(l, int) == isinstance(r, int)) and l == r
+    if isinstance(l, str) and isinstance(r, str):
+        return l == r  # case-SENSITIVE, unlike ==
+    if type(l) is type(r):
+        try:
+            return bool(l == r)
+        except Exception:
+            return False
+    return False
+
+
+def _compare(op: str, l: Value, r: Value) -> Value:
+    if _is_number(l) and _is_number(r):
+        lv, rv = float(l), float(r)
+    elif isinstance(l, str) and isinstance(r, str):
+        # Condor string comparison is case-insensitive for the ordered ops.
+        lv, rv = l.lower(), r.lower()
+    elif isinstance(l, bool) and isinstance(r, bool):
+        if op == "==":
+            return l == r
+        if op == "!=":
+            return l != r
+        return Error
+    else:
+        return Error  # incompatible types
+    if op == "==":
+        return lv == rv
+    if op == "!=":
+        return lv != rv
+    if op == "<":
+        return lv < rv
+    if op == "<=":
+        return lv <= rv
+    if op == ">":
+        return lv > rv
+    if op == ">=":
+        return lv >= rv
+    return Error  # pragma: no cover
+
+
+def _arith(op: str, l: Value, r: Value) -> Value:
+    if op == "+" and isinstance(l, str) and isinstance(r, str):
+        return l + r
+    if not (_is_number(l) and _is_number(r)):
+        return Error
+    if op == "+":
+        return l + r
+    if op == "-":
+        return l - r
+    if op == "*":
+        return l * r
+    if op == "/":
+        if r == 0:
+            return Error
+        if isinstance(l, int) and isinstance(r, int):
+            # Condor: integer division truncates toward zero.
+            q = abs(l) // abs(r)
+            return -q if (l < 0) != (r < 0) else q
+        return l / r
+    if op == "%":
+        if r == 0:
+            return Error
+        if isinstance(l, int) and isinstance(r, int):
+            m = abs(l) % abs(r)
+            return -m if l < 0 else m
+        return math.fmod(l, r)
+    return Error  # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# ClassAd record
+# ---------------------------------------------------------------------------
+
+
+class ClassAd:
+    """A classified advertisement: an attribute → expression mapping.
+
+    Attribute names are case-insensitive (as in Condor); the original
+    spelling is preserved for round-tripping. Values assigned as plain
+    Python objects are wrapped in :class:`Literal`; strings that should be
+    *expressions* must be assigned via :meth:`set_expr` or constructed with
+    :func:`parse`.
+    """
+
+    __slots__ = ("_attrs", "_spelling")
+
+    def __init__(self, attrs: Optional[Dict[str, Any]] = None):
+        self._attrs: Dict[str, Expr] = {}
+        self._spelling: Dict[str, str] = {}
+        if attrs:
+            for k, v in attrs.items():
+                self[k] = v
+
+    # -- mapping protocol ---------------------------------------------------
+    def __setitem__(self, name: str, value: Any) -> None:
+        if isinstance(value, Expr):
+            expr = value
+        elif isinstance(value, ClassAd):
+            expr = Literal(value)
+        elif isinstance(value, (bool, int, float, str)) or value is None:
+            expr = Literal(Undefined if value is None else value)
+        elif isinstance(value, (list, tuple)):
+            expr = ListExpr(
+                tuple(v if isinstance(v, Expr) else Literal(v) for v in value)
+            )
+        elif value is Undefined or value is Error:
+            expr = Literal(value)
+        else:
+            raise TypeError(f"cannot store {type(value)!r} in a ClassAd")
+        key = name.lower()
+        self._attrs[key] = expr
+        self._spelling[key] = name
+
+    def set_expr(self, name: str, source: str) -> None:
+        """Assign an attribute from ClassAd expression source text."""
+        self[name] = parse(source)
+
+    def __getitem__(self, name: str) -> Expr:
+        return self._attrs[name.lower()]
+
+    def __contains__(self, name: str) -> bool:
+        return name.lower() in self._attrs
+
+    def __delitem__(self, name: str) -> None:
+        key = name.lower()
+        del self._attrs[key]
+        del self._spelling[key]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._spelling.values())
+
+    def __len__(self) -> int:
+        return len(self._attrs)
+
+    def keys(self) -> List[str]:
+        return list(self._spelling.values())
+
+    def items(self) -> List[Tuple[str, Expr]]:
+        return [(self._spelling[k], v) for k, v in self._attrs.items()]
+
+    def lookup_expr(self, name: str) -> Optional[Expr]:
+        return self._attrs.get(name.lower())
+
+    # -- evaluation ----------------------------------------------------------
+    def eval_attr(
+        self,
+        name: str,
+        other: Optional["ClassAd"] = None,
+        env: Optional[Dict[str, Value]] = None,
+    ) -> Value:
+        """Evaluate attribute ``name`` of this ad (optionally in a match)."""
+        expr = self.lookup_expr(name)
+        if expr is None:
+            return Undefined
+        return evaluate(expr, self, other, env)
+
+    # -- conversion / io ------------------------------------------------------
+    def flatten(
+        self, other: Optional["ClassAd"] = None, env: Optional[Dict[str, Value]] = None
+    ) -> Dict[str, Value]:
+        """Evaluate every attribute; exceptional values are preserved."""
+        return {k: self.eval_attr(k, other, env) for k in self.keys()}
+
+    def copy(self) -> "ClassAd":
+        ad = ClassAd()
+        ad._attrs = dict(self._attrs)
+        ad._spelling = dict(self._spelling)
+        return ad
+
+    def update(self, other: "ClassAd") -> None:
+        for k, v in other.items():
+            self[k] = v
+
+    def __repr__(self) -> str:
+        inner = "; ".join(f"{k} = {v!r}" for k, v in self.items())
+        return f"[ {inner} ]"
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, ClassAd):
+            return NotImplemented
+        return repr(self) == repr(other)
+
+    def __hash__(self):  # pragma: no cover - ads are mutable; hash by id
+        return id(self)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation context
+# ---------------------------------------------------------------------------
+
+
+class _ClassAdError(Exception):
+    """Internal: raised by builtins to signal the Error value."""
+
+
+class EvalContext:
+    """Evaluation context: the pair of ads in a match plus an environment.
+
+    ``self_ad`` is the ad whose expression is being evaluated; ``other_ad``
+    is the candidate on the far side of the MatchClassAd. Unqualified
+    attribute references resolve in ``self_ad`` first, then ``other_ad``,
+    then the environment — Condor's lookup order inside a match.
+    """
+
+    __slots__ = ("self_ad", "other_ad", "env", "_depth")
+
+    MAX_DEPTH = 64  # cycle guard for self-referential ads
+
+    def __init__(
+        self,
+        self_ad: Optional[ClassAd],
+        other_ad: Optional[ClassAd] = None,
+        env: Optional[Dict[str, Value]] = None,
+        _depth: int = 0,
+    ):
+        self.self_ad = self_ad
+        self.other_ad = other_ad
+        self.env = env or {}
+        self._depth = _depth
+
+    def rescope(self, new_self: ClassAd) -> "EvalContext":
+        return EvalContext(new_self, self.other_ad, self.env, self._depth + 1)
+
+    def _swap(self) -> "EvalContext":
+        return EvalContext(self.other_ad, self.self_ad, self.env, self._depth + 1)
+
+    def lookup(self, scope: Optional[str], name: str) -> Value:
+        if self._depth > self.MAX_DEPTH:
+            return Error
+        key = name.lower()
+        if scope == "other":
+            if self.other_ad is None:
+                return Undefined
+            expr = self.other_ad.lookup_expr(key)
+            if expr is None:
+                return Undefined
+            return expr.eval(self._swap())
+        if scope == "my":
+            if self.self_ad is None:
+                return Undefined
+            expr = self.self_ad.lookup_expr(key)
+            if expr is None:
+                return Undefined
+            return expr.eval(self._bump())
+        # unqualified: self, then other, then environment
+        if self.self_ad is not None:
+            expr = self.self_ad.lookup_expr(key)
+            if expr is not None:
+                return expr.eval(self._bump())
+        if self.other_ad is not None:
+            expr = self.other_ad.lookup_expr(key)
+            if expr is not None:
+                return expr.eval(self._swap())
+        if key in self.env:
+            return self.env[key]
+        return Undefined
+
+    def _bump(self) -> "EvalContext":
+        return EvalContext(self.self_ad, self.other_ad, self.env, self._depth + 1)
+
+    def function(self, name: str) -> Optional[Callable]:
+        fn = self.env.get("__functions__", BUILTINS).get(name.lower())
+        return fn
+
+
+def evaluate(
+    expr: Expr,
+    ad: Optional[ClassAd] = None,
+    other: Optional[ClassAd] = None,
+    env: Optional[Dict[str, Value]] = None,
+) -> Value:
+    """Evaluate ``expr`` in the context of ``ad`` (matched against ``other``)."""
+    return expr.eval(EvalContext(ad, other, env))
+
+
+class MatchContext:
+    """The MatchClassAd of the paper's §4: a container for two ads.
+
+    "When two ClassAds are being matched, a MatchClassAd is created that
+    contains both ClassAds. Each ClassAd can refer to the other ClassAd by
+    using the `other` keyword."
+    """
+
+    __slots__ = ("left", "right", "env")
+
+    def __init__(self, left: ClassAd, right: ClassAd, env: Optional[Dict[str, Value]] = None):
+        self.left = left
+        self.right = right
+        self.env = env
+
+    def left_value(self, attr: str) -> Value:
+        return self.left.eval_attr(attr, self.right, self.env)
+
+    def right_value(self, attr: str) -> Value:
+        return self.right.eval_attr(attr, self.left, self.env)
+
+    def symmetric_match(self) -> bool:
+        """Both ``requirements`` must evaluate to True (U/E fail the match)."""
+        return self.left_value("requirements") is True and (
+            self.right_value("requirements") is True
+        )
+
+
+# ---------------------------------------------------------------------------
+# Lexer
+# ---------------------------------------------------------------------------
+
+
+class ClassAdSyntaxError(ValueError):
+    def __init__(self, msg: str, pos: int, text: str):
+        near = text[max(0, pos - 12) : pos + 12]
+        super().__init__(f"{msg} at position {pos} (near {near!r})")
+        self.pos = pos
+
+
+_TOKEN_RE = _re.compile(
+    r"""
+    (?P<ws>\s+|\#[^\n]*|//[^\n]*)
+  | (?P<real>\d+\.\d*(?:[eE][-+]?\d+)?|\.\d+(?:[eE][-+]?\d+)?|\d+[eE][-+]?\d+)
+    (?P<realunit>[KMGTPkmgtp]\b)?
+  | (?P<int>\d+)(?P<intunit>[KMGTPkmgtp]\b)?
+  | (?P<string>"(?:[^"\\]|\\.)*")
+  | (?P<op>=\?=|=!=|&&|\|\||<=|>=|==|!=|[-+*/%<>!?:(),.\[\]{};=])
+  | (?P<ident>[A-Za-z_][A-Za-z0-9_]*)
+    """,
+    _re.VERBOSE,
+)
+
+_KEYWORDS = {"true", "false", "undefined", "error", "is", "isnt"}
+
+
+@dataclass
+class _Token:
+    kind: str  # 'num' | 'str' | 'ident' | 'op' | 'eof'
+    value: Any
+    pos: int
+
+
+def _lex(text: str) -> List[_Token]:
+    tokens: List[_Token] = []
+    pos = 0
+    n = len(text)
+    while pos < n:
+        m = _TOKEN_RE.match(text, pos)
+        if m is None:
+            raise ClassAdSyntaxError("unexpected character", pos, text)
+        if m.lastgroup is None or m.group("ws"):
+            pos = m.end()
+            continue
+        if m.group("real") is not None:
+            val = float(m.group("real"))
+            unit = m.group("realunit")
+            if unit:
+                val *= UNIT_SUFFIXES[unit.upper()]
+            tokens.append(_Token("num", val, pos))
+        elif m.group("int") is not None:
+            val = int(m.group("int"))
+            unit = m.group("intunit")
+            if unit:
+                val *= UNIT_SUFFIXES[unit.upper()]
+            tokens.append(_Token("num", val, pos))
+        elif m.group("string") is not None:
+            raw = m.group("string")[1:-1]
+            val = raw.encode("utf-8").decode("unicode_escape")
+            tokens.append(_Token("str", val, pos))
+        elif m.group("op") is not None:
+            tokens.append(_Token("op", m.group("op"), pos))
+        elif m.group("ident") is not None:
+            ident = m.group("ident")
+            low = ident.lower()
+            if low in ("is", "isnt"):
+                tokens.append(_Token("op", "=?=" if low == "is" else "=!=", pos))
+            else:
+                tokens.append(_Token("ident", ident, pos))
+        pos = m.end()
+    tokens.append(_Token("eof", None, n))
+    return tokens
+
+
+# ---------------------------------------------------------------------------
+# Parser (Pratt / precedence climbing)
+# ---------------------------------------------------------------------------
+
+# precedence: higher binds tighter
+_BIN_PREC = {
+    "||": 10,
+    "&&": 20,
+    "==": 30,
+    "!=": 30,
+    "=?=": 30,
+    "=!=": 30,
+    "<": 40,
+    "<=": 40,
+    ">": 40,
+    ">=": 40,
+    "+": 50,
+    "-": 50,
+    "*": 60,
+    "/": 60,
+    "%": 60,
+}
+
+_TERNARY_PREC = 5
+
+_SCOPES = {"my": "my", "self": "my", "other": "other", "target": "other"}
+
+
+class _Parser:
+    def __init__(self, text: str):
+        self.text = text
+        self.tokens = _lex(text)
+        self.i = 0
+
+    # -- token helpers ---------------------------------------------------
+    def peek(self) -> _Token:
+        return self.tokens[self.i]
+
+    def next(self) -> _Token:
+        tok = self.tokens[self.i]
+        self.i += 1
+        return tok
+
+    def expect_op(self, op: str) -> None:
+        tok = self.next()
+        if tok.kind != "op" or tok.value != op:
+            raise ClassAdSyntaxError(f"expected {op!r}", tok.pos, self.text)
+
+    def at_op(self, *ops: str) -> bool:
+        tok = self.peek()
+        return tok.kind == "op" and tok.value in ops
+
+    # -- grammar -----------------------------------------------------------
+    def parse_expr(self, min_prec: int = 0) -> Expr:
+        left = self.parse_unary()
+        while True:
+            tok = self.peek()
+            if tok.kind == "op" and tok.value == "?" and _TERNARY_PREC >= min_prec:
+                self.next()
+                then = self.parse_expr(0)
+                self.expect_op(":")
+                other = self.parse_expr(_TERNARY_PREC)
+                left = Ternary(left, then, other)
+                continue
+            if tok.kind != "op" or tok.value not in _BIN_PREC:
+                break
+            prec = _BIN_PREC[tok.value]
+            if prec < min_prec:
+                break
+            op = self.next().value
+            right = self.parse_expr(prec + 1)
+            left = BinOp(op, left, right)
+        return left
+
+    def parse_unary(self) -> Expr:
+        tok = self.peek()
+        if tok.kind == "op" and tok.value in ("-", "+", "!"):
+            self.next()
+            return UnaryOp(tok.value, self.parse_unary())
+        return self.parse_postfix()
+
+    def parse_postfix(self) -> Expr:
+        expr = self.parse_primary()
+        while True:
+            if self.at_op("."):
+                self.next()
+                tok = self.next()
+                if tok.kind != "ident":
+                    raise ClassAdSyntaxError("expected attribute name", tok.pos, self.text)
+                # `other.x` / `my.x` on a bare scope keyword becomes AttrRef
+                if isinstance(expr, AttrRef) and expr.scope is None and expr.name.lower() in _SCOPES:
+                    expr = AttrRef(_SCOPES[expr.name.lower()], tok.value)
+                else:
+                    expr = Select(expr, tok.value)
+            elif self.at_op("["):
+                self.next()
+                idx = self.parse_expr(0)
+                self.expect_op("]")
+                expr = Index(expr, idx)
+            else:
+                break
+        return expr
+
+    def parse_primary(self) -> Expr:
+        tok = self.next()
+        if tok.kind == "num":
+            return Literal(tok.value)
+        if tok.kind == "str":
+            return Literal(tok.value)
+        if tok.kind == "ident":
+            low = tok.value.lower()
+            if low == "true":
+                return Literal(True)
+            if low == "false":
+                return Literal(False)
+            if low == "undefined":
+                return Literal(Undefined)
+            if low == "error":
+                return Literal(Error)
+            # function call?
+            if self.at_op("("):
+                self.next()
+                args: List[Expr] = []
+                if not self.at_op(")"):
+                    args.append(self.parse_expr(0))
+                    while self.at_op(","):
+                        self.next()
+                        args.append(self.parse_expr(0))
+                self.expect_op(")")
+                return FuncCall(low, tuple(args))
+            return AttrRef(None, tok.value)
+        if tok.kind == "op":
+            if tok.value == "(":
+                inner = self.parse_expr(0)
+                self.expect_op(")")
+                return inner
+            if tok.value == "{":
+                items: List[Expr] = []
+                if not self.at_op("}"):
+                    items.append(self.parse_expr(0))
+                    while self.at_op(","):
+                        self.next()
+                        items.append(self.parse_expr(0))
+                self.expect_op("}")
+                return ListExpr(tuple(items))
+            if tok.value == "[":
+                return self.parse_record_body()
+        raise ClassAdSyntaxError("unexpected token", tok.pos, self.text)
+
+    def parse_record_body(self) -> Literal:
+        """`[ a = expr ; b = expr ]` — nested ClassAd literal."""
+        ad = ClassAd()
+        while not self.at_op("]"):
+            tok = self.next()
+            if tok.kind != "ident":
+                raise ClassAdSyntaxError("expected attribute name", tok.pos, self.text)
+            self.expect_op("=")
+            ad[tok.value] = self.parse_expr(0)
+            if self.at_op(";"):
+                self.next()
+        self.expect_op("]")
+        return Literal(ad)
+
+
+def parse(text: str) -> Expr:
+    """Parse ClassAd expression source text into an AST."""
+    p = _Parser(text)
+    expr = p.parse_expr(0)
+    tok = p.peek()
+    if tok.kind != "eof":
+        raise ClassAdSyntaxError("trailing input", tok.pos, text)
+    return expr
+
+
+def parse_classad(text: str) -> ClassAd:
+    """Parse a full ClassAd in either record syntax or newline/;-separated
+    ``name = expr`` form (the paper's Figure-style ads)."""
+    stripped = text.strip()
+    if stripped.startswith("["):
+        lit = parse(stripped)
+        if isinstance(lit, Literal) and isinstance(lit.value, ClassAd):
+            return lit.value
+        raise ClassAdSyntaxError("not a ClassAd record", 0, text)
+    # name = expr; name = expr ... (semicolons and/or newlines)
+    ad = ClassAd()
+    p = _Parser(stripped)
+    while p.peek().kind != "eof":
+        tok = p.next()
+        if tok.kind != "ident":
+            raise ClassAdSyntaxError("expected attribute name", tok.pos, stripped)
+        p.expect_op("=")
+        ad[tok.value] = p.parse_expr(0)
+        if p.at_op(";"):
+            p.next()
+    return ad
+
+
+# ---------------------------------------------------------------------------
+# Builtin function library (all deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _need_number(v: Value) -> float:
+    if _is_number(v):
+        return float(v)
+    raise _ClassAdError()
+
+
+def _fn_wrap_exceptional(argv: Sequence[Value]) -> Optional[Value]:
+    for a in argv:
+        if a is Error:
+            return Error
+    for a in argv:
+        if a is Undefined:
+            return Undefined
+    return None
+
+
+def _builtin(name: str, *, strict: bool = True):
+    def deco(fn):
+        def wrapper(ctx: EvalContext, argv: List[Value]) -> Value:
+            if strict:
+                exc = _fn_wrap_exceptional(argv)
+                if exc is not None:
+                    return exc
+            return fn(ctx, argv)
+
+        BUILTINS[name] = wrapper
+        return fn
+
+    return deco
+
+
+BUILTINS: Dict[str, Callable[[EvalContext, List[Value]], Value]] = {}
+
+
+@_builtin("abs")
+def _fn_abs(ctx, argv):
+    (v,) = argv
+    if _is_number(v):
+        return abs(v)
+    return Error
+
+
+@_builtin("floor")
+def _fn_floor(ctx, argv):
+    return int(math.floor(_need_number(argv[0])))
+
+
+@_builtin("ceiling")
+def _fn_ceiling(ctx, argv):
+    return int(math.ceil(_need_number(argv[0])))
+
+
+BUILTINS["ceil"] = BUILTINS["ceiling"]
+
+
+@_builtin("round")
+def _fn_round(ctx, argv):
+    # round-half-away-from-zero, like C round(); Python's round is banker's
+    x = _need_number(argv[0])
+    return int(math.floor(x + 0.5)) if x >= 0 else int(math.ceil(x - 0.5))
+
+
+@_builtin("pow")
+def _fn_pow(ctx, argv):
+    base, exp = _need_number(argv[0]), _need_number(argv[1])
+    try:
+        r = math.pow(base, exp)
+    except (ValueError, OverflowError):
+        return Error
+    return r
+
+
+@_builtin("sqrt")
+def _fn_sqrt(ctx, argv):
+    x = _need_number(argv[0])
+    if x < 0:
+        return Error
+    return math.sqrt(x)
+
+
+@_builtin("log")
+def _fn_log(ctx, argv):
+    x = _need_number(argv[0])
+    if x <= 0:
+        return Error
+    return math.log(x)
+
+
+@_builtin("exp")
+def _fn_exp(ctx, argv):
+    try:
+        return math.exp(_need_number(argv[0]))
+    except OverflowError:
+        return Error
+
+
+@_builtin("int")
+def _fn_int(ctx, argv):
+    (v,) = argv
+    if isinstance(v, bool):
+        return int(v)
+    if _is_number(v):
+        return int(v)
+    if isinstance(v, str):
+        try:
+            return int(float(v))
+        except ValueError:
+            return Error
+    return Error
+
+
+@_builtin("real")
+def _fn_real(ctx, argv):
+    (v,) = argv
+    if isinstance(v, bool):
+        return float(v)
+    if _is_number(v):
+        return float(v)
+    if isinstance(v, str):
+        try:
+            return float(v)
+        except ValueError:
+            return Error
+    return Error
+
+
+@_builtin("string")
+def _fn_string(ctx, argv):
+    (v,) = argv
+    if isinstance(v, str):
+        return v
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if _is_number(v):
+        return repr(v)
+    return Error
+
+
+@_builtin("strcat")
+def _fn_strcat(ctx, argv):
+    parts = []
+    for v in argv:
+        s = _fn_string(ctx, [v])
+        if s is Error:
+            return Error
+        parts.append(s)
+    return "".join(parts)
+
+
+@_builtin("strlen")
+def _fn_strlen(ctx, argv):
+    (v,) = argv
+    return len(v) if isinstance(v, str) else Error
+
+
+@_builtin("substr")
+def _fn_substr(ctx, argv):
+    s = argv[0]
+    if not isinstance(s, str):
+        return Error
+    start = argv[1]
+    if not isinstance(start, int) or isinstance(start, bool):
+        return Error
+    if len(argv) >= 3:
+        length = argv[2]
+        if not isinstance(length, int) or isinstance(length, bool):
+            return Error
+        return s[start : start + length]
+    return s[start:]
+
+
+@_builtin("tolower")
+def _fn_tolower(ctx, argv):
+    (v,) = argv
+    return v.lower() if isinstance(v, str) else Error
+
+
+@_builtin("toupper")
+def _fn_toupper(ctx, argv):
+    (v,) = argv
+    return v.upper() if isinstance(v, str) else Error
+
+
+@_builtin("size")
+def _fn_size(ctx, argv):
+    (v,) = argv
+    if isinstance(v, (list, str)):
+        return len(v)
+    if isinstance(v, ClassAd):
+        return len(v)
+    return Error
+
+
+@_builtin("member", strict=False)
+def _fn_member(ctx, argv):
+    if len(argv) != 2:
+        return Error
+    item, lst = argv
+    if lst is Error or item is Error:
+        return Error
+    if lst is Undefined:
+        return Undefined
+    if not isinstance(lst, list):
+        return Error
+    for x in lst:
+        if _is_identical(item, x):
+            return True
+        if (
+            _is_number(item)
+            and _is_number(x)
+            and float(item) == float(x)
+        ):
+            return True
+        if isinstance(item, str) and isinstance(x, str) and item.lower() == x.lower():
+            return True
+    return False
+
+
+def _numeric_list(argv: List[Value]) -> Optional[List[float]]:
+    if len(argv) == 1 and isinstance(argv[0], list):
+        vals = argv[0]
+    else:
+        vals = argv
+    out = []
+    for v in vals:
+        if not _is_number(v):
+            return None
+        out.append(float(v))
+    return out
+
+
+@_builtin("min")
+def _fn_min(ctx, argv):
+    vals = _numeric_list(argv)
+    if not vals:
+        return Error
+    return min(vals)
+
+
+@_builtin("max")
+def _fn_max(ctx, argv):
+    vals = _numeric_list(argv)
+    if not vals:
+        return Error
+    return max(vals)
+
+
+@_builtin("sum")
+def _fn_sum(ctx, argv):
+    vals = _numeric_list(argv)
+    if vals is None:
+        return Error
+    return sum(vals)
+
+
+@_builtin("avg")
+def _fn_avg(ctx, argv):
+    vals = _numeric_list(argv)
+    if not vals:
+        return Error
+    return sum(vals) / len(vals)
+
+
+@_builtin("regexp")
+def _fn_regexp(ctx, argv):
+    if len(argv) < 2:
+        return Error
+    pat, s = argv[0], argv[1]
+    if not (isinstance(pat, str) and isinstance(s, str)):
+        return Error
+    flags = 0
+    if len(argv) >= 3 and isinstance(argv[2], str) and "i" in argv[2].lower():
+        flags |= _re.IGNORECASE
+    try:
+        return _re.search(pat, s, flags) is not None
+    except _re.error:
+        return Error
+
+
+@_builtin("ifthenelse", strict=False)
+def _fn_ifthenelse(ctx, argv):
+    if len(argv) != 3:
+        return Error
+    c = argv[0]
+    if c is Undefined or c is Error:
+        return c
+    if not isinstance(c, bool):
+        return Error
+    return argv[1] if c else argv[2]
+
+
+@_builtin("isundefined", strict=False)
+def _fn_isundefined(ctx, argv):
+    return argv[0] is Undefined
+
+
+@_builtin("iserror", strict=False)
+def _fn_iserror(ctx, argv):
+    return argv[0] is Error
+
+
+@_builtin("isboolean", strict=False)
+def _fn_isboolean(ctx, argv):
+    return isinstance(argv[0], bool)
+
+
+@_builtin("isinteger", strict=False)
+def _fn_isinteger(ctx, argv):
+    return isinstance(argv[0], int) and not isinstance(argv[0], bool)
+
+
+@_builtin("isreal", strict=False)
+def _fn_isreal(ctx, argv):
+    return isinstance(argv[0], float)
+
+
+@_builtin("isstring", strict=False)
+def _fn_isstring(ctx, argv):
+    return isinstance(argv[0], str)
+
+
+@_builtin("islist", strict=False)
+def _fn_islist(ctx, argv):
+    return isinstance(argv[0], list)
+
+
+@_builtin("time", strict=False)
+def _fn_time(ctx, argv):
+    # Deterministic: reads the injected clock from the environment.
+    clk = ctx.env.get("now")
+    if clk is None:
+        return Error
+    return int(clk)

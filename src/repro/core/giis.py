@@ -1,0 +1,123 @@
+"""Grid Index Information Service (GIIS) — the discovery index of §3.
+
+"Users will typically direct broad queries to GIIS to discover resources
+and then drill down with direct queries to GRIS to get up-to-date,
+detailed information about individual resources."
+
+A GIIS holds *registrations* from GRIS servers (or child GIISs — the MDS
+hierarchy), answers broad searches from a cached snapshot with a
+registration-level TTL, and hands back GRIS references for drill-down.
+The cache models MDS behaviour: index answers may be slightly stale; the
+authoritative fresh answer always comes from the resource's own GRIS.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from .gris import Clock, StorageGRIS
+from .ldif import Entry, Filter, parse_filter
+
+__all__ = ["Registration", "GIIS"]
+
+
+@dataclass
+class Registration:
+    """One GRIS (or child GIIS) registered with an index."""
+
+    name: str
+    service: Union[StorageGRIS, "GIIS"]
+    registered_at: float
+    snapshot: List[Entry] = field(default_factory=list)
+    snapshot_at: float = float("-inf")
+
+
+class GIIS:
+    """An index over GRIS servers, optionally hierarchical.
+
+    Parameters
+    ----------
+    name:
+        Index name (e.g. ``o=grid`` or a zone like ``o=pod-3``).
+    cache_ttl:
+        How long an index-level snapshot of a registrant's entries is
+        served before being refreshed from the registrant.
+    """
+
+    def __init__(self, name: str, *, clock: Optional[Clock] = None, cache_ttl: float = 30.0):
+        self.name = name
+        self.clock = clock or Clock()
+        self.cache_ttl = cache_ttl
+        self._registry: Dict[str, Registration] = {}
+        self.query_count = 0
+        self.refresh_count = 0
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str, service: Union[StorageGRIS, "GIIS"]) -> None:
+        self._registry[name] = Registration(name, service, self.clock.now())
+
+    def deregister(self, name: str) -> None:
+        self._registry.pop(name, None)
+
+    def registrants(self) -> List[str]:
+        return sorted(self._registry)
+
+    def lookup(self, name: str) -> Optional[Union[StorageGRIS, "GIIS"]]:
+        reg = self._registry.get(name)
+        return reg.service if reg else None
+
+    # -- search --------------------------------------------------------------
+    def _snapshot(self, reg: Registration) -> List[Entry]:
+        now = self.clock.now()
+        if now - reg.snapshot_at >= self.cache_ttl:
+            svc = reg.service
+            if isinstance(svc, GIIS):
+                reg.snapshot = svc.search(None)
+            else:
+                reg.snapshot = svc.entries()
+            reg.snapshot_at = now
+            self.refresh_count += 1
+        return reg.snapshot
+
+    def search(
+        self,
+        flt: Optional[Filter | str] = None,
+        attrs: Optional[Sequence[str]] = None,
+    ) -> List[Entry]:
+        """Broad search across every registrant (cached snapshots)."""
+        self.query_count += 1
+        if isinstance(flt, str):
+            flt = parse_filter(flt)
+        out: List[Entry] = []
+        for name in sorted(self._registry):
+            for entry in self._snapshot(self._registry[name]):
+                if flt is None or flt.matches(entry):
+                    if attrs is None:
+                        out.append(dict(entry))
+                    else:
+                        want = {a.lower() for a in attrs} | {"dn", "objectclass"}
+                        out.append({k: v for k, v in entry.items() if k.lower() in want})
+        return out
+
+    def discover(self, flt: Optional[Filter | str] = None) -> List[Tuple[str, StorageGRIS]]:
+        """Discovery: which GRIS servers have entries matching ``flt``?
+
+        Returns (registrant name, GRIS) pairs for drill-down — the paper's
+        two-phase "broad query to GIIS, direct query to GRIS" pattern.
+        Hierarchy is flattened (child GIISs are recursed into).
+        """
+        if isinstance(flt, str):
+            flt = parse_filter(flt)
+        out: List[Tuple[str, StorageGRIS]] = []
+        for name in sorted(self._registry):
+            reg = self._registry[name]
+            svc = reg.service
+            if isinstance(svc, GIIS):
+                out.extend(svc.discover(flt))
+                continue
+            for entry in self._snapshot(reg):
+                if flt is None or flt.matches(entry):
+                    out.append((name, svc))
+                    break
+        return out

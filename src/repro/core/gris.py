@@ -1,0 +1,258 @@
+"""Grid Resource Information Service (GRIS) for storage resources (§3.1).
+
+"Each storage resource in the Globus Data Grid incorporates a Grid
+Resource Information Server, configured to collect and publish system
+configuration metadata describing that storage system."
+
+The paper's GRIS is an OpenLDAP daemon whose *dynamic* attributes
+(``availableSpace``, ``totalSpace``, ``mountPoint``) are produced by
+shell-backend scripts executed per query, while *static* attributes (seek
+times, usage policy) come from an administrator configuration file.
+
+We preserve those semantics in-process:
+
+  * static attributes are a plain dict, set at construction / by the admin,
+  * dynamic attributes are **provider callbacks** invoked on query, with a
+    per-attribute TTL cache (shell-backends were expensive; MDS cached),
+  * entries are validated against the §3 object classes before publication,
+  * queries take LDAP filters and an optional attribute projection, and
+    return LDIF entries — exactly what the broker's Search Phase consumes.
+
+A GRIS owns a small DIT: the ServerVolume entry, one TransferBandwidth
+child summarizing all transfers, and one SourceTransferBandwidth child per
+remote source site (Figures 2, 4, 5).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .ldif import Entry, Filter, dumps as ldif_dumps, parse_filter
+from .schema import (
+    OBJECT_CLASSES,
+    SERVER_VOLUME,
+    SOURCE_TRANSFER_BANDWIDTH,
+    TRANSFER_BANDWIDTH,
+    ObjectClass,
+    validate_entry,
+)
+
+__all__ = ["DynamicAttribute", "StorageGRIS", "Clock"]
+
+
+class Clock:
+    """Injected, manually-advanced clock so TTL caching and the ``time()``
+    ClassAd builtin are deterministic in tests and benchmarks."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> None:
+        self._now += float(dt)
+
+    def set(self, t: float) -> None:
+        self._now = float(t)
+
+
+@dataclass
+class DynamicAttribute:
+    """A shell-backend-style dynamic attribute: provider + TTL cache."""
+
+    name: str
+    provider: Callable[[], Any]
+    ttl: float = 5.0
+    _cached: Any = None
+    _cached_at: float = float("-inf")
+    calls: int = 0  # instrumentation: provider invocations (cache misses)
+
+    def value(self, now: float) -> Any:
+        if now - self._cached_at >= self.ttl:
+            self._cached = self.provider()
+            self._cached_at = now
+            self.calls += 1
+        return self._cached
+
+    def invalidate(self) -> None:
+        self._cached_at = float("-inf")
+
+
+class StorageGRIS:
+    """The per-resource information server, holding the storage DIT.
+
+    Parameters
+    ----------
+    dn:
+        Distinguished name of the ServerVolume entry, e.g.
+        ``gss=vol0, ou=mcs, o=anl, o=grid``.
+    static_attrs:
+        Administrator-configured attributes (seek times, ``requirements``
+        policy string, hostname, zone, ...).
+    clock:
+        Shared deterministic clock (drives TTL expiry).
+    """
+
+    def __init__(
+        self,
+        dn: str,
+        static_attrs: Optional[Mapping[str, Any]] = None,
+        *,
+        clock: Optional[Clock] = None,
+        validate: bool = True,
+    ):
+        self.dn = dn
+        self.clock = clock or Clock()
+        self.validate = validate
+        self._static: Dict[str, Any] = dict(static_attrs or {})
+        self._dynamic: Dict[str, DynamicAttribute] = {}
+        # bandwidth summary + per-source children, maintained by the
+        # TransferMonitor (core/bandwidth.py) via publish_* below.
+        self._bw_summary: Optional[Dict[str, Any]] = None
+        self._bw_sources: Dict[str, Dict[str, Any]] = {}
+        self.query_count = 0  # instrumentation
+
+    # -- attribute management ------------------------------------------------
+    def set_static(self, name: str, value: Any) -> None:
+        self._static[name] = value
+
+    def register_dynamic(
+        self, name: str, provider: Callable[[], Any], ttl: float = 5.0
+    ) -> None:
+        """Attach a shell-backend-style provider for a dynamic attribute."""
+        self._dynamic[name] = DynamicAttribute(name, provider, ttl)
+
+    def invalidate(self, name: Optional[str] = None) -> None:
+        if name is None:
+            for d in self._dynamic.values():
+                d.invalidate()
+        elif name in self._dynamic:
+            self._dynamic[name].invalidate()
+
+    # -- bandwidth publication (called by TransferMonitor) --------------------
+    def publish_bandwidth_summary(self, attrs: Mapping[str, Any]) -> None:
+        entry = dict(attrs)
+        if self.validate:
+            validate_entry(entry, TRANSFER_BANDWIDTH)
+        self._bw_summary = entry
+
+    def publish_source_bandwidth(self, source_url: str, attrs: Mapping[str, Any]) -> None:
+        entry = dict(attrs)
+        entry.setdefault("sourceUrl", source_url)
+        if self.validate:
+            validate_entry(entry, SOURCE_TRANSFER_BANDWIDTH)
+        self._bw_sources[source_url] = entry
+
+    # -- entry materialization -------------------------------------------------
+    def volume_entry(self) -> Entry:
+        now = self.clock.now()
+        entry: Entry = {"dn": self.dn, "objectClass": SERVER_VOLUME.name}
+        entry.update(self._static)
+        for name, dyn in self._dynamic.items():
+            entry[name] = dyn.value(now)
+        if self.validate:
+            validate_entry(entry, SERVER_VOLUME)
+        return entry
+
+    def bandwidth_entry(self) -> Optional[Entry]:
+        if self._bw_summary is None:
+            return None
+        entry: Entry = {
+            "dn": f"gss=bw, {self.dn}",
+            "objectClass": TRANSFER_BANDWIDTH.name,
+        }
+        entry.update(self._bw_summary)
+        return entry
+
+    def source_entries(self) -> List[Entry]:
+        out: List[Entry] = []
+        for src, attrs in sorted(self._bw_sources.items()):
+            entry: Entry = {
+                "dn": f"gss=src-{src}, gss=bw, {self.dn}",
+                "objectClass": SOURCE_TRANSFER_BANDWIDTH.name,
+            }
+            entry.update(attrs)
+            out.append(entry)
+        return out
+
+    def entries(self) -> List[Entry]:
+        """The full DIT subtree rooted at this GRIS, parent-first."""
+        out = [self.volume_entry()]
+        bw = self.bandwidth_entry()
+        if bw is not None:
+            out.append(bw)
+        out.extend(self.source_entries())
+        return out
+
+    # -- search (the LDAP surface) ----------------------------------------------
+    def search(
+        self,
+        flt: Optional[Filter | str] = None,
+        attrs: Optional[Sequence[str]] = None,
+        *,
+        source: Optional[str] = None,
+    ) -> List[Entry]:
+        """LDAP-style search over this GRIS's DIT.
+
+        ``flt`` filters entries; ``attrs`` projects returned attributes (the
+        broker asks only for "the attributes of interest"); ``source``
+        narrows SourceTransferBandwidth children to one remote site and
+        *flattens* the matching child into the volume view, which is how
+        brokers read end-to-end stats for their own site in one query.
+        """
+        self.query_count += 1
+        if isinstance(flt, str):
+            flt = parse_filter(flt)
+
+        candidates = [self.volume_entry()]
+        bw = self.bandwidth_entry()
+        if bw is not None:
+            candidates.append(bw)
+        if source is not None:
+            src = self._bw_sources.get(source)
+            if src is not None:
+                entry: Entry = {
+                    "dn": f"gss=src-{source}, gss=bw, {self.dn}",
+                    "objectClass": SOURCE_TRANSFER_BANDWIDTH.name,
+                }
+                entry.update(src)
+                candidates.append(entry)
+        else:
+            candidates.extend(self.source_entries())
+
+        out: List[Entry] = []
+        for entry in candidates:
+            if flt is None or flt.matches(entry):
+                out.append(_project(entry, attrs))
+        return out
+
+    def flattened_view(self, source: Optional[str] = None) -> Entry:
+        """One merged attribute dict over the whole DIT subtree — what the
+        broker converts to a ClassAd. Children override nothing; their
+        attribute names are disjoint by schema design."""
+        view: Entry = {}
+        for entry in self.search(source=source):
+            for k, v in entry.items():
+                if k == "dn":
+                    continue
+                if k == "objectClass":
+                    view.setdefault("objectClass", [])
+                    if isinstance(view["objectClass"], list):
+                        view["objectClass"].append(v)
+                    continue
+                view.setdefault(k, v)
+        view["dn"] = self.dn
+        return view
+
+    def to_ldif(self) -> str:
+        return ldif_dumps(self.entries())
+
+
+def _project(entry: Entry, attrs: Optional[Sequence[str]]) -> Entry:
+    if attrs is None:
+        return dict(entry)
+    want = {a.lower() for a in attrs} | {"dn", "objectclass"}
+    return {k: v for k, v in entry.items() if k.lower() in want}

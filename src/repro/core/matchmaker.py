@@ -1,0 +1,128 @@
+"""Matchmaking: pairing request ClassAds with resource ClassAds.
+
+Implements the Match Phase of the paper's §5.1.2:
+
+  2. "The broker then performs a match of the application's requirement
+     ClassAd against the list of replica capability ClassAds, obtaining a
+     set of replica locations that satisfy the criterion."
+  3. "The ClassAd ranking feature can be used to prioritize successful
+     matches based on some attribute, specified by the application."
+
+Matching is *two-sided* (Condor semantics): both the request's and the
+resource's ``requirements`` must evaluate to True inside the MatchClassAd.
+This is how the paper expresses *site usage policy* — the storage ad of §4
+only admits requests with ``other.reqdSpace < 10G``.
+
+Ranking follows Condor: the *request's* ``rank`` expression is evaluated
+against each matched resource; non-numeric / Undefined ranks are treated
+as 0.0. Ties are broken deterministically by the resource's name attribute
+(and finally by input order) so that two decentralized brokers holding the
+same published state reach the same decision — a property we test.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .classads import ClassAd, MatchContext, Undefined, Value
+
+__all__ = ["MatchResult", "Matchmaker", "match", "rank_value"]
+
+
+@dataclass
+class MatchResult:
+    """One successful match: the resource ad and the request's rank for it."""
+
+    ad: ClassAd
+    rank: float
+    index: int  # position in the candidate list (deterministic tiebreak)
+    name: str = ""
+
+    def __repr__(self) -> str:
+        return f"MatchResult(name={self.name!r}, rank={self.rank}, index={self.index})"
+
+
+def rank_value(request: ClassAd, resource: ClassAd, env: Optional[Dict[str, Value]] = None) -> float:
+    """Evaluate the request's ``rank`` against ``resource``; 0.0 if absent
+    or non-numeric (Condor's convention)."""
+    v = request.eval_attr("rank", resource, env)
+    if isinstance(v, bool):
+        return 1.0 if v else 0.0
+    if isinstance(v, (int, float)):
+        return float(v)
+    return 0.0
+
+
+def _resource_name(ad: ClassAd, idx: int) -> str:
+    for attr in ("name", "hostname", "endpoint", "url"):
+        v = ad.eval_attr(attr)
+        if isinstance(v, str):
+            return v
+    return f"resource-{idx}"
+
+
+class Matchmaker:
+    """A reusable matchmaker with an injected evaluation environment.
+
+    The environment supplies deterministic globals (e.g. ``now`` for the
+    ``time()`` builtin). A fresh Matchmaker per broker keeps the process
+    decentralized: there is no shared state between clients.
+    """
+
+    def __init__(self, env: Optional[Dict[str, Value]] = None):
+        self.env = dict(env or {})
+
+    # -- predicates -----------------------------------------------------
+    def requirements_met(self, request: ClassAd, resource: ClassAd) -> bool:
+        """Two-sided requirements check (Undefined / Error fail closed)."""
+        return MatchContext(request, resource, self.env).symmetric_match()
+
+    def one_sided(self, evaluator: ClassAd, target: ClassAd) -> bool:
+        """Check only ``evaluator.requirements`` against ``target``."""
+        return evaluator.eval_attr("requirements", target, self.env) is True
+
+    # -- matching ---------------------------------------------------------
+    def match(
+        self,
+        request: ClassAd,
+        candidates: Sequence[ClassAd],
+        *,
+        top_k: Optional[int] = None,
+        require_symmetric: bool = True,
+    ) -> List[MatchResult]:
+        """Match ``request`` against ``candidates``; return rank-sorted results.
+
+        ``require_symmetric=False`` degrades to one-sided matching (only the
+        request's requirements), for resources that publish no policy.
+        """
+        results: List[MatchResult] = []
+        for idx, cand in enumerate(candidates):
+            if require_symmetric and "requirements" in cand:
+                ok = self.requirements_met(request, cand)
+            else:
+                ok = self.one_sided(request, cand)
+            if not ok:
+                continue
+            r = rank_value(request, cand, self.env)
+            results.append(MatchResult(cand, r, idx, _resource_name(cand, idx)))
+        # Descending rank; deterministic tiebreak by (name, index).
+        results.sort(key=lambda m: (-m.rank, m.name, m.index))
+        if top_k is not None:
+            results = results[:top_k]
+        return results
+
+    def best(self, request: ClassAd, candidates: Sequence[ClassAd]) -> Optional[MatchResult]:
+        res = self.match(request, candidates, top_k=1)
+        return res[0] if res else None
+
+
+def match(
+    request: ClassAd,
+    candidates: Sequence[ClassAd],
+    *,
+    env: Optional[Dict[str, Value]] = None,
+    top_k: Optional[int] = None,
+) -> List[MatchResult]:
+    """Module-level convenience wrapper around :class:`Matchmaker`."""
+    return Matchmaker(env).match(request, candidates, top_k=top_k)

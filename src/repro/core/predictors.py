@@ -1,0 +1,225 @@
+"""Bandwidth predictors: history as a predictor of future transfer times.
+
+§3.2: "We favor an alternative approach in which historical information
+concerning data transfer rates is used as a predictor of future transfer
+times... statistical information based on the performance data, such as
+average transfer bandwidths and their standard deviations, that can help
+predict the behavior of a particular replica."
+
+§7 points at the Network Weather Service for predictive analysis; NWS
+(Wolski '98) runs a *family* of forecasters and picks whichever has the
+lowest recent error. We implement the paper's simple statistics (last
+value, running mean/min/max/std) plus the NWS-style family:
+
+  * ``LastValue``       — the paper's ``lastRDBandwidth`` heuristic,
+  * ``RunningMean``     — the paper's ``AvgRDBandwidth``,
+  * ``SlidingMean(w)``, ``SlidingMedian(w)`` — windowed robust variants,
+  * ``Ewma(alpha)``     — exponential smoothing,
+  * ``AdaptivePredictor`` — NWS-style: tracks per-forecaster MAE online and
+    predicts with the current best.
+
+All are O(1)-update streaming estimators over scalar series, used by the
+broker to turn per-source history into a rank attribute, and mirrored in
+vectorized form by ``kernels/bwstats`` for fleet-scale batches.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Predictor",
+    "LastValue",
+    "RunningMean",
+    "SlidingMean",
+    "SlidingMedian",
+    "Ewma",
+    "AdaptivePredictor",
+    "make_predictor",
+    "PREDICTOR_FAMILIES",
+]
+
+
+class Predictor:
+    """Streaming scalar predictor interface."""
+
+    name = "base"
+
+    def update(self, value: float) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def predict(self) -> Optional[float]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def update_many(self, values: Sequence[float]) -> None:
+        for v in values:
+            self.update(v)
+
+
+class LastValue(Predictor):
+    """Predict the most recent observation (paper's ``lastRDBandwidth``)."""
+
+    name = "last"
+
+    def __init__(self):
+        self._last: Optional[float] = None
+
+    def update(self, value: float) -> None:
+        self._last = float(value)
+
+    def predict(self) -> Optional[float]:
+        return self._last
+
+
+class RunningMean(Predictor):
+    """Predict the all-history mean (paper's ``AvgRDBandwidth``), with
+    Welford-stable mean/std tracking."""
+
+    name = "mean"
+
+    def __init__(self):
+        self.n = 0
+        self._mean = 0.0
+        self._m2 = 0.0
+
+    def update(self, value: float) -> None:
+        self.n += 1
+        d = value - self._mean
+        self._mean += d / self.n
+        self._m2 += d * (value - self._mean)
+
+    def predict(self) -> Optional[float]:
+        return self._mean if self.n else None
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self._m2 / self.n) if self.n > 1 else 0.0
+
+
+class SlidingMean(Predictor):
+    name = "sliding_mean"
+
+    def __init__(self, window: int = 16):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = window
+        self._buf: Deque[float] = deque(maxlen=window)
+        self._sum = 0.0
+
+    def update(self, value: float) -> None:
+        if len(self._buf) == self.window:
+            self._sum -= self._buf[0]
+        self._buf.append(float(value))
+        self._sum += float(value)
+
+    def predict(self) -> Optional[float]:
+        return self._sum / len(self._buf) if self._buf else None
+
+
+class SlidingMedian(Predictor):
+    """Windowed median — robust to the bandwidth outliers WANs produce."""
+
+    name = "sliding_median"
+
+    def __init__(self, window: int = 16):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = window
+        self._buf: Deque[float] = deque(maxlen=window)
+
+    def update(self, value: float) -> None:
+        self._buf.append(float(value))
+
+    def predict(self) -> Optional[float]:
+        if not self._buf:
+            return None
+        s = sorted(self._buf)
+        n = len(s)
+        mid = n // 2
+        return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+class Ewma(Predictor):
+    name = "ewma"
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self._value: Optional[float] = None
+
+    def update(self, value: float) -> None:
+        if self._value is None:
+            self._value = float(value)
+        else:
+            self._value = self.alpha * float(value) + (1.0 - self.alpha) * self._value
+
+    def predict(self) -> Optional[float]:
+        return self._value
+
+
+class AdaptivePredictor(Predictor):
+    """NWS-style forecaster selection: run a family, track each member's
+    mean absolute error against realized observations, predict with the
+    member whose recent error is lowest."""
+
+    name = "adaptive"
+
+    def __init__(self, members: Optional[Sequence[Predictor]] = None, error_window: int = 32):
+        self.members: List[Predictor] = list(
+            members
+            if members is not None
+            else [LastValue(), RunningMean(), SlidingMean(8), SlidingMedian(8), Ewma(0.25)]
+        )
+        self._errors: List[Deque[float]] = [deque(maxlen=error_window) for _ in self.members]
+
+    def update(self, value: float) -> None:
+        # Score each member's *prior* prediction against the new truth...
+        for pred, errs in zip(self.members, self._errors):
+            p = pred.predict()
+            if p is not None:
+                errs.append(abs(p - value))
+        # ...then let everyone absorb the observation.
+        for pred in self.members:
+            pred.update(value)
+
+    def _mae(self, i: int) -> float:
+        errs = self._errors[i]
+        return sum(errs) / len(errs) if errs else float("inf")
+
+    def best_member(self) -> Predictor:
+        scored = [(self._mae(i), i) for i in range(len(self.members))]
+        scored.sort()
+        return self.members[scored[0][1]]
+
+    def predict(self) -> Optional[float]:
+        # Before any errors accumulate, fall back to the first member
+        # that has data (deterministic order).
+        best = self.best_member()
+        p = best.predict()
+        if p is not None:
+            return p
+        for m in self.members:
+            q = m.predict()
+            if q is not None:
+                return q
+        return None
+
+
+PREDICTOR_FAMILIES = {
+    "last": LastValue,
+    "mean": RunningMean,
+    "sliding_mean": SlidingMean,
+    "sliding_median": SlidingMedian,
+    "ewma": Ewma,
+    "adaptive": AdaptivePredictor,
+}
+
+
+def make_predictor(kind: str, **kwargs) -> Predictor:
+    if kind not in PREDICTOR_FAMILIES:
+        raise ValueError(f"unknown predictor {kind!r}; options: {sorted(PREDICTOR_FAMILIES)}")
+    return PREDICTOR_FAMILIES[kind](**kwargs)

@@ -1,0 +1,210 @@
+"""The storage DIT object classes of the paper's §3 (Figures 2–5).
+
+The paper defines a Directory Information Tree for storage systems:
+
+    Grid::Top
+      └─ Grid::organization
+           └─ Grid::organizationalUnit
+                └─ Grid::Storage::ServerVolume          (Figure 2)
+                     └─ Grid::Storage::TransferBandwidth      (Figure 4)
+                          └─ Grid::Storage::SourceTransferBandwidth (Figure 5)
+
+Each object class declares MUST CONTAIN / MAY CONTAIN attribute sets with
+typed syntaxes (``cisfloat``/``cis``). We reproduce those definitions
+verbatim and add validation so a GRIS refuses to publish an entry that
+violates its schema — the property the LDAP server would have enforced.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = [
+    "AttributeSpec",
+    "ObjectClass",
+    "SERVER_VOLUME",
+    "TRANSFER_BANDWIDTH",
+    "SOURCE_TRANSFER_BANDWIDTH",
+    "OBJECT_CLASSES",
+    "SchemaError",
+    "validate_entry",
+]
+
+
+class SchemaError(ValueError):
+    """An entry violates its object class definition."""
+
+
+@dataclass(frozen=True)
+class AttributeSpec:
+    """One attribute in an object class: name, LDAP syntax, multiplicity."""
+
+    name: str
+    syntax: str  # 'cisfloat' (numeric) | 'cis' (case-insensitive string)
+    singular: bool = True
+
+    def check(self, value: Any) -> None:
+        values = value if isinstance(value, (list, tuple)) else [value]
+        if self.singular and len(values) != 1:
+            raise SchemaError(f"{self.name}: singular attribute given {len(values)} values")
+        for v in values:
+            if self.syntax == "cisfloat":
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    raise SchemaError(f"{self.name}: expected numeric (cisfloat), got {v!r}")
+            elif self.syntax == "cis":
+                if not isinstance(v, str):
+                    raise SchemaError(f"{self.name}: expected string (cis), got {v!r}")
+            else:  # pragma: no cover - schema definition error
+                raise SchemaError(f"{self.name}: unknown syntax {self.syntax!r}")
+
+
+@dataclass(frozen=True)
+class ObjectClass:
+    """An LDAP object class: MUST/MAY attribute sets within the DIT."""
+
+    name: str
+    rdn: str
+    subclass_of: Optional[str]
+    child_of: Tuple[str, ...]
+    must: Tuple[AttributeSpec, ...]
+    may: Tuple[AttributeSpec, ...] = ()
+
+    def attr(self, name: str) -> Optional[AttributeSpec]:
+        low = name.lower()
+        for spec in self.must + self.may:
+            if spec.name.lower() == low:
+                return spec
+        return None
+
+    @property
+    def must_names(self) -> List[str]:
+        return [s.name for s in self.must]
+
+
+def _f(name: str) -> AttributeSpec:
+    return AttributeSpec(name, "cisfloat", True)
+
+
+def _s(name: str, singular: bool = True) -> AttributeSpec:
+    return AttributeSpec(name, "cis", singular)
+
+
+#: Figure 2 — ``Grid::Storage::ServerVolume``: System Configuration Metadata.
+#: ``totalSpace``/``availableSpace``/``mountPoint`` are *dynamic* (gathered by
+#: shell-backends on each query); the transfer/seek times and the admin
+#: ``requirements`` policy are *static* (from a configuration file).
+#: The paper's figure types mountPoint as cisfloat and availableSpace as cis —
+#: plainly typos (a mount point is a path); we use the sensible syntaxes.
+SERVER_VOLUME = ObjectClass(
+    name="Grid::Storage::ServerVolume",
+    rdn="gss",
+    subclass_of="Grid::PhysicalResource",
+    child_of=("Grid::organizationalUnit", "Grid::organization", "Grid::Top"),
+    must=(
+        _f("totalSpace"),
+        _f("availableSpace"),
+        _s("mountPoint"),
+        _f("diskTransferRate"),
+        _f("drdTime"),
+        _f("dwrTime"),
+    ),
+    may=(
+        _s("requirements"),
+        AttributeSpec("filesystem", "cis", singular=False),
+        _s("hostname"),
+        _s("zone"),
+        _f("nStreamsMax"),
+        _f("loadFactor"),
+    ),
+)
+
+#: Figure 4 — ``Grid::Storage::TransferBandwidth``: site-wide summary of
+#: observed GridFTP transfer performance.
+TRANSFER_BANDWIDTH = ObjectClass(
+    name="Grid::Storage::TransferBandwidth",
+    rdn="gss",
+    subclass_of="Grid::Storage::ServerVolume",
+    child_of=(
+        "Grid::Storage::ServerVolume",
+        "Grid::organizationalUnit",
+        "Grid::organization",
+        "Grid::Top",
+    ),
+    must=(
+        _f("MaxRDBandwidth"),
+        _f("MinRDBandwidth"),
+        _f("AvgRDBandwidth"),
+        _f("MaxWRBandwidth"),
+        _f("MinWRBandwidth"),
+        _f("AvgWRBandwidth"),
+    ),
+    may=(
+        _f("StdRDBandwidth"),
+        _f("StdWRBandwidth"),
+        _f("nRDSamples"),
+        _f("nWRSamples"),
+    ),
+)
+
+#: Figure 5 — ``Grid::Storage::SourceTransferBandwidth``: per-source-site
+#: end-to-end performance ("significant reuse of storage servers by clients
+#: ... justifying performance information on a per source basis").
+SOURCE_TRANSFER_BANDWIDTH = ObjectClass(
+    name="Grid::Storage::SourceTransferBandwidth",
+    rdn="gss",
+    subclass_of="Grid::Storage::TransferBandwidth",
+    child_of=(
+        "Grid::Storage::TransferBandwidth",
+        "Grid::Storage::ServerVolume",
+        "Grid::organizationalUnit",
+        "Grid::organization",
+        "Grid::Top",
+    ),
+    must=(
+        _f("lastWRBandwidth"),
+        _s("lastWRurl"),
+        _f("lastRDBandwidth"),
+        _s("lastRDurl"),
+    ),
+    may=(
+        _f("AvgRDBandwidthToSource"),
+        _f("AvgWRBandwidthToSource"),
+        _f("EwmaRDBandwidthToSource"),
+        _f("MedianRDBandwidthToSource"),
+        _f("nSamplesToSource"),
+        _s("sourceUrl"),
+    ),
+)
+
+OBJECT_CLASSES: Dict[str, ObjectClass] = {
+    oc.name.lower(): oc
+    for oc in (SERVER_VOLUME, TRANSFER_BANDWIDTH, SOURCE_TRANSFER_BANDWIDTH)
+}
+
+
+def validate_entry(
+    entry: Mapping[str, Any], object_class: ObjectClass, *, strict_may: bool = False
+) -> None:
+    """Check ``entry`` against ``object_class``.
+
+    Raises :class:`SchemaError` if a MUST attribute is missing, a value has
+    the wrong syntax, or (``strict_may``) an attribute is not declared at
+    all. Keys are matched case-insensitively, like LDAP.
+    """
+    keys = {k.lower(): k for k in entry.keys()}
+    for spec in object_class.must:
+        k = keys.get(spec.name.lower())
+        if k is None:
+            raise SchemaError(f"missing MUST attribute {spec.name!r} for {object_class.name}")
+        spec.check(entry[k])
+    for spec in object_class.may:
+        k = keys.get(spec.name.lower())
+        if k is not None:
+            spec.check(entry[k])
+    if strict_may:
+        declared = {s.name.lower() for s in object_class.must + object_class.may}
+        declared |= {"dn", "objectclass"}
+        for k in keys:
+            if k not in declared:
+                raise SchemaError(f"undeclared attribute {k!r} for {object_class.name}")

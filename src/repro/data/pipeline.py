@@ -1,0 +1,111 @@
+"""The broker-backed input pipeline — the paper's technique on the hot path.
+
+Each training host runs a :class:`DataPipeline` around its own
+:class:`~repro.core.broker.DataBroker` (decentralized, §5.1.1): every
+shard fetch runs Search → Match → Access against live GRIS state, so
+replica choice adapts as bandwidth history accumulates, endpoints die
+(failover) or degrade (mid-transfer straggler re-selection).
+
+Determinism: the shard schedule is a pure function of
+(epoch, host_index, n_hosts) — ``parallel.elastic.host_shard_assignment``
+— so after an elastic re-mesh every host recomputes its slice with no
+coordinator. Fetched shards are LRU-cached; a prefetch depth of 1 hides
+transfer time behind the previous batch's step in a real deployment (here
+it keeps accounting: ``stats['prefetch_hits']``).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.broker import DataBroker, default_read_request
+from repro.parallel.elastic import host_shard_assignment
+from repro.storage.endpoint import DataGrid
+
+from .datasets import ShardManifest, SyntheticCorpus
+
+__all__ = ["BatchSpec", "DataPipeline"]
+
+
+@dataclass(frozen=True)
+class BatchSpec:
+    batch: int  # sequences per batch on this host
+    seq_len: int
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.batch * (self.seq_len + 1)  # +1 for the shifted labels
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        host_url: str,
+        host_index: int,
+        n_hosts: int,
+        grid: DataGrid,
+        manifest: ShardManifest,
+        spec: BatchSpec,
+        *,
+        broker: Optional[DataBroker] = None,
+        cache_shards: int = 4,
+        min_bandwidth: float = 0.0,
+    ):
+        self.host_url = host_url
+        self.host_index = host_index
+        self.n_hosts = n_hosts
+        self.grid = grid
+        self.manifest = manifest
+        self.spec = spec
+        self.broker = broker or grid.broker_for(host_url)
+        self.transfer = grid.transfer_service()
+        self.min_bandwidth = min_bandwidth
+        self._cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._cache_max = cache_shards
+        self.stats = {"fetches": 0, "cache_hits": 0, "bytes": 0, "fetch_seconds": 0.0}
+
+    # -- shard access -----------------------------------------------------
+    def _tokens_for_shard(self, shard: int) -> np.ndarray:
+        if shard in self._cache:
+            self._cache.move_to_end(shard)
+            self.stats["cache_hits"] += 1
+            return self._cache[shard]
+        req = default_read_request(self.host_url, min_bandwidth=self.min_bandwidth)
+        out = self.broker.fetch(self.manifest.lfn(shard), self.transfer, req)
+        tokens = SyntheticCorpus.decode_bytes(out.payload)
+        self.stats["fetches"] += 1
+        self.stats["bytes"] += out.nbytes
+        self.stats["fetch_seconds"] += out.seconds
+        self._cache[shard] = tokens
+        while len(self._cache) > self._cache_max:
+            self._cache.popitem(last=False)
+        return tokens
+
+    def my_shards(self, epoch: int) -> List[int]:
+        return host_shard_assignment(
+            self.manifest.n_shards, self.n_hosts, self.host_index, epoch=epoch
+        )
+
+    # -- batching -------------------------------------------------------------
+    def batches(self, epoch: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        """Yield {'tokens': [B, S], 'labels': [B, S]} until this host's
+        shard slice for the epoch is exhausted."""
+        need = self.spec.tokens_per_batch
+        buf = np.empty(0, dtype=np.int32)
+        for shard in self.my_shards(epoch):
+            buf = np.concatenate([buf, self._tokens_for_shard(shard)])
+            while len(buf) >= need:
+                chunk, buf = buf[:need], buf[need:]
+                seqs = chunk.reshape(self.spec.batch, self.spec.seq_len + 1)
+                yield {
+                    "tokens": np.ascontiguousarray(seqs[:, :-1]) % self.manifest.vocab_size,
+                    "labels": np.ascontiguousarray(seqs[:, 1:]) % self.manifest.vocab_size,
+                }
+
+    def steps_per_epoch(self, epoch: int = 0) -> int:
+        total = len(self.my_shards(epoch)) * self.manifest.tokens_per_shard
+        return total // self.spec.tokens_per_batch

@@ -1,0 +1,39 @@
+"""Byte-level tokenizer stub (deterministic, dependency-free).
+
+Real deployments plug a BPE here; the framework only requires the
+encode/decode contract. Tokens are bytes offset by the special-token
+block, so round-tripping is exact and any ``vocab_size ≥ 260`` works.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = ["ByteTokenizer"]
+
+
+class ByteTokenizer:
+    PAD, BOS, EOS, SEP = 0, 1, 2, 3
+    OFFSET = 4
+
+    def __init__(self, vocab_size: int = 50257):
+        if vocab_size < 256 + self.OFFSET:
+            raise ValueError("vocab_size too small for byte tokenizer")
+        self.vocab_size = vocab_size
+
+    def encode(self, text: str, *, bos: bool = True, eos: bool = True) -> List[int]:
+        ids = [b + self.OFFSET for b in text.encode("utf-8")]
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        bs = bytes(i - self.OFFSET for i in ids if i >= self.OFFSET and i - self.OFFSET < 256)
+        return bs.decode("utf-8", errors="replace")
+
+    def encode_array(self, text: str, **kw) -> np.ndarray:
+        return np.asarray(self.encode(text, **kw), dtype=np.int32)

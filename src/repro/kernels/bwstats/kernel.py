@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: one-pass windowed bandwidth statistics.
+
+The information plane of a 1000-node job tracks a per-(endpoint, client)
+bandwidth history — N series of W observations. Publishing predictor
+attributes (§3.2 / Figure 4-5 extensions) means reducing every series to
+min/max/mean/std/last/EWMA after each batch of observations. That is a
+single HBM pass: ``4·N·W`` bytes in, ``6·N·4`` bytes out — memory-bound,
+so the kernel fuses all six statistics into one read of the history tile.
+
+Layout: the series axis N is tiled by the grid (BLOCK_N sublane-aligned);
+the window W is the lane axis (padded to 128). The EWMA is evaluated as a
+dot with decay weights computed in-register from the lane index — a VPU
+expression, not a sequential scan (state-space-style recurrences lowered
+to exponent arithmetic, the same trick our SSD layer uses at model scale).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38
+
+
+def _bwstats_kernel(
+    hist_ref,  # [BLOCK_N, W_PAD] f32
+    counts_ref,  # [BLOCK_N] i32
+    mn_ref, mx_ref, mean_ref, std_ref, last_ref, ewma_ref,  # [BLOCK_N] f32 each
+    *,
+    w_pad: int,
+    alpha: float,
+):
+    hist = hist_ref[...]
+    cnt = counts_ref[...][:, None]  # [B, 1] i32
+    lane = jax.lax.broadcasted_iota(jnp.int32, hist.shape, 1)  # [B, W]
+    m = lane < cnt
+    cntf = jnp.maximum(cnt.astype(jnp.float32), 1.0)[:, 0]
+
+    mn = jnp.min(jnp.where(m, hist, BIG), axis=1)
+    mx = jnp.max(jnp.where(m, hist, -BIG), axis=1)
+    s1 = jnp.sum(jnp.where(m, hist, 0.0), axis=1)
+    mean = s1 / cntf
+    # two-pass variance: E[x²]−E[x]² cancels catastrophically in f32 for
+    # bandwidth-scale values (~1e9); the tile is already in VMEM so the
+    # second pass is free
+    d = jnp.where(m, hist - mean[:, None], 0.0)
+    var = jnp.sum(d * d, axis=1) / cntf
+    std = jnp.sqrt(var)
+    last = jnp.sum(jnp.where(lane == cnt - 1, hist, 0.0), axis=1)
+
+    expo = jnp.maximum((cnt - 1 - lane).astype(jnp.float32), 0.0)
+    decay = jnp.power(jnp.float32(1.0 - alpha), expo)  # exact at alpha=1
+    wgt = jnp.where(lane == 0, decay, jnp.float32(alpha) * decay)
+    ewma = jnp.sum(jnp.where(m, hist * wgt, 0.0), axis=1)
+
+    empty = counts_ref[...] <= 0
+    z = jnp.float32(0.0)
+    mn_ref[...] = jnp.where(empty, z, mn)
+    mx_ref[...] = jnp.where(empty, z, mx)
+    mean_ref[...] = jnp.where(empty, z, mean)
+    std_ref[...] = jnp.where(empty, z, std)
+    last_ref[...] = jnp.where(empty, z, last)
+    ewma_ref[...] = jnp.where(empty, z, ewma)
+
+
+def bwstats_pallas(
+    hist: jnp.ndarray,  # [N, W_PAD] f32 (N % block_n == 0, W_PAD % 128 == 0)
+    counts: jnp.ndarray,  # [N] i32
+    *,
+    alpha: float = 0.25,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, ...]:
+    n, w_pad = hist.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    kernel = functools.partial(_bwstats_kernel, w_pad=w_pad, alpha=alpha)
+    out_shape = tuple(jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(6))
+    in_specs = [
+        pl.BlockSpec((block_n, w_pad), lambda i: (i, 0)),
+        pl.BlockSpec((block_n,), lambda i: (i,)),
+    ]
+    out_specs = tuple(pl.BlockSpec((block_n,), lambda i: (i,)) for _ in range(6))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(hist, counts)

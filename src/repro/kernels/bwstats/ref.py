@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the windowed bandwidth-statistics kernel.
+
+Contract: histories are **left-aligned** rows of a ``[N, W]`` matrix
+(``hist[i, :counts[i]]`` are valid, oldest→newest), as produced by
+``TransferMonitor.history_matrix``. Outputs per series:
+
+  min, max, mean, std (population), last, ewma
+
+EWMA follows the recursive definition seeded with the first observation:
+``v_0 = x_0``, ``v_i = α·x_i + (1-α)·v_{i-1}`` — expressed *non-recursively*
+as a dot with the decay-weight vector
+``w_i = α(1-α)^{n-1-i}`` (i>0), ``w_0 = (1-α)^{n-1}``,
+which is the form the TPU kernel evaluates on the VPU (no sequential scan).
+Series with count 0 produce zeros across the board.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.4e38)
+
+
+def bwstats_ref(
+    hist: jnp.ndarray,  # [N, W] f32, left-aligned
+    counts: jnp.ndarray,  # [N] i32
+    alpha: float = 0.25,
+) -> Tuple[jnp.ndarray, ...]:
+    """→ (min, max, mean, std, last, ewma), each [N] f32."""
+    hist = hist.astype(jnp.float32)
+    n, w = hist.shape
+    lane = jnp.arange(w, dtype=jnp.int32)[None, :]  # [1, W]
+    cnt = counts.astype(jnp.int32)[:, None]  # [N, 1]
+    m = lane < cnt  # [N, W] valid mask
+    cntf = jnp.maximum(cnt.astype(jnp.float32), 1.0)
+
+    mn = jnp.min(jnp.where(m, hist, BIG), axis=1)
+    mx = jnp.max(jnp.where(m, hist, -BIG), axis=1)
+    s1 = jnp.sum(jnp.where(m, hist, 0.0), axis=1)
+    mean = s1 / cntf[:, 0]
+    # two-pass variance (f32-stable at bandwidth scales; see kernel.py)
+    d = jnp.where(m, hist - mean[:, None], 0.0)
+    var = jnp.sum(d * d, axis=1) / cntf[:, 0]
+    std = jnp.sqrt(var)
+
+    last = jnp.sum(jnp.where(lane == cnt - 1, hist, 0.0), axis=1)
+
+    # EWMA decay weights: exponent = n-1-i, clamped for masked lanes
+    expo = jnp.maximum((cnt - 1 - lane).astype(jnp.float32), 0.0)
+    decay = jnp.power(jnp.float32(1.0 - alpha), expo)
+    wgt = jnp.where(lane == 0, decay, jnp.float32(alpha) * decay)
+    ewma = jnp.sum(jnp.where(m, hist * wgt, 0.0), axis=1)
+
+    empty = counts <= 0
+    z = jnp.float32(0.0)
+    return (
+        jnp.where(empty, z, mn),
+        jnp.where(empty, z, mx),
+        jnp.where(empty, z, mean),
+        jnp.where(empty, z, std),
+        jnp.where(empty, z, last),
+        jnp.where(empty, z, ewma),
+    )

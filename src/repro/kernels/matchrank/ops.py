@@ -1,0 +1,210 @@
+"""Jit'd wrapper + request lowering for the matchrank kernel.
+
+``matchrank`` pads/validates inputs and dispatches to the Pallas kernel
+(or the pure-jnp ref as a fallback). ``lower_request`` turns a ClassAd
+request into kernel operands via the conjunctive-threshold / linear-rank
+extractors of :mod:`repro.core.compile` — the bridge from the paper's
+language to the TPU hot loop. ``matchrank_topk`` composes the fused scores
+with ``lax.top_k`` for k > 1.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classads import ClassAd
+from repro.core.compile import (
+    OPCODES,
+    CompileError,
+    extract_conjunctive_terms,
+    extract_linear_rank,
+)
+
+from .kernel import matchrank_pallas
+from .ref import matchrank_ref
+
+__all__ = ["KernelPlan", "lower_request", "matchrank", "matchrank_topk", "pad_columns"]
+
+
+def _pad_to(x: np.ndarray, n: int, axis: int = 0, fill=0.0) -> np.ndarray:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=fill)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass
+class KernelPlan:
+    """Kernel operands lowered from a ClassAd request over a fixed
+    attribute vocabulary (column order)."""
+
+    attr_names: List[str]  # column order, len = A (pre-pad)
+    sel: np.ndarray  # [T_PAD, A_PAD]
+    op_codes: np.ndarray  # [T_PAD] i32
+    thresholds: np.ndarray  # [T_PAD] f32
+    term_active: np.ndarray  # [T_PAD] f32
+    weights: np.ndarray  # [A_PAD] f32
+    bias: np.ndarray  # [1] f32
+    a_pad: int
+    t_pad: int
+
+
+def lower_request(
+    request: ClassAd,
+    attr_names: Sequence[str],
+    *,
+    env: Optional[Dict] = None,
+    t_pad: int = 16,
+) -> KernelPlan:
+    """Lower (requirements, rank) to kernel operands, or raise CompileError.
+
+    This is the 'predicate pushdown' contract: the request must be a
+    conjunction of threshold comparisons and a linear rank — the common
+    case for storage selection (space/bandwidth gates, bandwidth rank).
+    Anything richer takes the columnar-JAX or interpreter path instead.
+    """
+    names = [n.lower() for n in attr_names]
+    index = {n: i for i, n in enumerate(names)}
+    a = len(names)
+    a_pad = max(_round_up(a, 128), 128)
+
+    req = request.lookup_expr("requirements")
+    terms = []
+    if req is not None:
+        extracted = extract_conjunctive_terms(req, request, env=env)
+        if extracted is None:
+            raise CompileError("requirements not conjunctive-threshold")
+        terms = extracted
+    if len(terms) > t_pad:
+        t_pad = _round_up(len(terms), 8)
+
+    sel = np.zeros((t_pad, a_pad), dtype=np.float32)
+    op_codes = np.zeros((t_pad,), dtype=np.int32)
+    thresholds = np.zeros((t_pad,), dtype=np.float32)
+    term_active = np.zeros((t_pad,), dtype=np.float32)
+    for t, term in enumerate(terms):
+        if term.attr not in index:
+            # attribute absent from the vocabulary: every candidate is
+            # Undefined on it ⇒ nothing can match. Encode as an
+            # always-false active term on column 0.
+            sel[t, 0] = 1.0
+            op_codes[t] = OPCODES["<"]
+            thresholds[t] = float("-inf")
+            term_active[t] = 1.0
+            continue
+        sel[t, index[term.attr]] = 1.0
+        op_codes[t] = OPCODES[term.op]
+        thresholds[t] = np.float32(term.threshold)
+        term_active[t] = 1.0
+
+    rank_expr = request.lookup_expr("rank")
+    weights = np.zeros((a_pad,), dtype=np.float32)
+    bias = np.zeros((1,), dtype=np.float32)
+    if rank_expr is not None:
+        lin = extract_linear_rank(rank_expr, request, env=env)
+        if lin is None:
+            raise CompileError("rank not linear")
+        for attr, w in lin.items():
+            if attr == "":
+                bias[0] += np.float32(w)
+            elif attr in index:
+                weights[index[attr]] += np.float32(w)
+            # weight on an unknown attribute ⇒ rank Undefined ⇒ 0 for all;
+            # encode by an impossible validity demand: weight on padding col
+            else:
+                weights[a_pad - 1] += np.float32(w) if w != 0 else 0.0
+
+    return KernelPlan(
+        list(names), sel, op_codes, thresholds, term_active, weights, bias, a_pad, t_pad
+    )
+
+
+def pad_columns(
+    attrs: np.ndarray, valid: np.ndarray, a_pad: int, block_s: int = 512
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pad [S, A] column blocks to [S_PAD, A_PAD]; padded rows invalid."""
+    s, a = attrs.shape
+    s_pad = max(_round_up(s, block_s), block_s)
+    attrs_p = _pad_to(_pad_to(attrs.astype(np.float32), a_pad, axis=1), s_pad, axis=0)
+    valid_p = _pad_to(_pad_to(valid.astype(np.float32), a_pad, axis=1), s_pad, axis=0)
+    return attrs_p, valid_p, s_pad
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "use_kernel", "interpret")
+)
+def _dispatch(
+    attrs, valid, admit, sel, op_codes, thresholds, term_active, weights, bias,
+    *, block_s: int, use_kernel: bool, interpret: bool,
+):
+    if use_kernel:
+        return matchrank_pallas(
+            attrs, valid, admit, sel, op_codes, thresholds, term_active,
+            weights, bias, block_s=block_s, interpret=interpret,
+        )
+    return matchrank_ref(
+        attrs, valid, sel, op_codes, thresholds, term_active, weights, bias, admit
+    )
+
+
+def matchrank(
+    attrs: np.ndarray,  # [S, A] f32 (unpadded)
+    valid: np.ndarray,  # [S, A] bool/f32
+    plan: KernelPlan,
+    *,
+    admit: Optional[np.ndarray] = None,  # [S] pre-mask (folded policies)
+    block_s: int = 512,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, float, int]:
+    """Run the fused match+rank+top-1. Returns (mask[S], score[S],
+    best_score, best_idx) trimmed back to the unpadded S."""
+    s = attrs.shape[0]
+    attrs_p, valid_p, s_pad = pad_columns(attrs, valid, plan.a_pad, block_s)
+    if admit is None:
+        admit_p = np.zeros((s_pad,), dtype=np.float32)
+        admit_p[:s] = 1.0
+    else:
+        admit_p = np.zeros((s_pad,), dtype=np.float32)
+        admit_p[:s] = np.asarray(admit, dtype=np.float32)
+
+    mask, score, best_s, best_i = _dispatch(
+        jnp.asarray(attrs_p), jnp.asarray(valid_p), jnp.asarray(admit_p),
+        jnp.asarray(plan.sel), jnp.asarray(plan.op_codes),
+        jnp.asarray(plan.thresholds), jnp.asarray(plan.term_active),
+        jnp.asarray(plan.weights), jnp.asarray(plan.bias),
+        block_s=block_s, use_kernel=use_kernel, interpret=interpret,
+    )
+    return (
+        np.asarray(mask)[:s],
+        np.asarray(score)[:s],
+        float(best_s[0]),
+        int(best_i[0]),
+    )
+
+
+def matchrank_topk(
+    attrs: np.ndarray,
+    valid: np.ndarray,
+    plan: KernelPlan,
+    k: int,
+    **kw,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k selection: fused kernel scores + lax.top_k. Returns
+    (indices[k], scores[k]); unmatched slots have score -inf."""
+    mask, score, _, _ = matchrank(attrs, valid, plan, **kw)
+    s = jnp.asarray(score)
+    vals, idx = jax.lax.top_k(s, min(k, s.shape[0]))
+    return np.asarray(idx), np.asarray(vals)

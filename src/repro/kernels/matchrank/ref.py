@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the fused match+rank+top-1 kernel.
+
+Semantics contract (shared with kernel.py and property-tested against the
+ClassAd interpreter through ops.py):
+
+  * ``terms``: conjunctive threshold comparisons over attribute columns.
+    A term on an *invalid* attribute is Undefined ⇒ the candidate fails
+    (fail-closed, like the interpreter's symmetric match).
+  * ``rank``: linear form  Σ_a w_a·attr_a + bias. If any attribute with a
+    non-zero weight is invalid for a candidate, its rank is 0.0 (Condor's
+    non-numeric-rank convention).
+  * ``admit``: a caller-supplied pre-mask (folded server policies).
+  * score output: rank where matched, ``-inf`` where not (top-k ready).
+  * best output: arg-top-1 (score, index), ties → lowest index.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+#: opcode encoding shared with core.compile.OPCODES
+OP_LT, OP_LE, OP_GT, OP_GE, OP_EQ, OP_NE = 0, 1, 2, 3, 4, 5
+
+NEG_INF = float("-inf")
+
+
+def matchrank_ref(
+    attrs: jnp.ndarray,  # [S, A] f32
+    valid: jnp.ndarray,  # [S, A] bool/f32
+    sel: jnp.ndarray,  # [T, A] f32 one-hot rows (padding rows all-zero)
+    op_codes: jnp.ndarray,  # [T] i32
+    thresholds: jnp.ndarray,  # [T] f32
+    term_active: jnp.ndarray,  # [T] bool/f32 (padding terms inactive)
+    weights: jnp.ndarray,  # [A] f32
+    bias: jnp.ndarray,  # scalar f32
+    admit: jnp.ndarray,  # [S] bool/f32
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (mask [S] bool, score [S] f32, best_score [1] f32,
+    best_idx [1] i32)."""
+    attrs = attrs.astype(jnp.float32)
+    validf = valid.astype(jnp.float32)
+    self_dtype = jnp.float32
+
+    # per-term values via one-hot matmul (gather-free, MXU-friendly)
+    vals = attrs @ sel.T.astype(self_dtype)  # [S, T]
+    vok = (validf @ sel.T.astype(self_dtype)) > 0.5  # [S, T]
+
+    th = thresholds[None, :]
+    cmps = jnp.stack(
+        [
+            vals < th,
+            vals <= th,
+            vals > th,
+            vals >= th,
+            vals == th,
+            vals != th,
+        ],
+        axis=-1,
+    )  # [S, T, 6]
+    opc = jnp.clip(op_codes, 0, 5)
+    picked = jnp.take_along_axis(cmps, opc[None, :, None], axis=-1)[..., 0]  # [S, T]
+
+    act = term_active.astype(bool)[None, :]
+    term_pass = jnp.where(act, picked & vok, True)  # inactive terms pass
+    mask = jnp.all(term_pass, axis=-1) & (admit.astype(bool))
+
+    # linear rank with validity gating
+    score_raw = attrs @ weights.astype(self_dtype) + bias
+    wactive = (jnp.abs(weights) > 0).astype(self_dtype)  # [A]
+    bad = (1.0 - validf) @ wactive  # [S] — # of invalid weighted attrs
+    rank = jnp.where(bad > 0, 0.0, score_raw)
+
+    score = jnp.where(mask, rank, NEG_INF)
+    best_idx = jnp.argmax(score)  # ties → lowest index
+    best_score = score[best_idx]
+    return mask, score, best_score[None], best_idx[None].astype(jnp.int32)

@@ -1,0 +1,364 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import (jax locks the
+#   device count on first init). The dry-run, and only the dry-run, sees
+#   512 placeholder devices; tests and benches keep seeing 1.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each of
+the 10 assigned architectures × their 4 input shapes, on the single-pod
+``(data=16, model=16)`` and multi-pod ``(pod=2, data=16, model=16)``
+meshes, the train / prefill / decode step is ``jit(...).lower(...).
+compile()``d from ShapeDtypeStructs (no allocation). Each cell records:
+
+  * ``memory_analysis()`` — per-device bytes (does it fit 16 GB v5e HBM),
+  * ``cost_analysis()``   — FLOPs / bytes for the roofline,
+  * collective bytes parsed from the partitioned HLO (launch/roofline.py),
+  * the sharding-policy fallbacks taken (every divisibility degradation).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-20b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both -o experiments/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, ShapeSpec, get_arch, list_archs
+from repro.models import transformer
+from repro.parallel.ctx import activation_sharding
+from repro.parallel.sharding import ShardingPolicy, _path_str
+from repro.train.optim import AdamWConfig
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+from .hlo_analysis import analyze_hlo
+from .mesh import TPU_V5E, make_production_mesh
+from .roofline import roofline_report
+
+# cells skipped per the long_500k sub-quadratic rule (DESIGN.md §4)
+LONG_CTX_ARCHS = {"h2o-danube3-4b", "jamba-v0.1-52b", "mamba2-130m"}
+
+
+def shape_cells(arch: str):
+    for sname, spec in INPUT_SHAPES.items():
+        if sname == "long_500k" and arch not in LONG_CTX_ARCHS:
+            continue
+        yield sname, spec
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        text = s - cfg.n_patches
+        return {
+            "tokens": _sds((gb, text), jnp.int32),
+            "labels": _sds((gb, text), jnp.int32),
+            "patch_embeds": _sds((gb, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.enc_dec:
+        return {
+            "tokens": _sds((gb, s), jnp.int32),
+            "labels": _sds((gb, s), jnp.int32),
+            "frames": _sds((gb, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+        }
+    return {
+        "tokens": _sds((gb, s), jnp.int32),
+        "labels": _sds((gb, s), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    spec = train_input_specs(cfg, shape)
+    spec.pop("labels")
+    return spec
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """(tokens, caches, step_pos) stand-ins for one decode step with a KV
+    cache of seq_len."""
+    gb, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, gb, s, jnp.bfloat16)
+    )
+    return (
+        _sds((gb, 1), jnp.int32),
+        caches,
+        _sds((gb,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# policy / shardings per cell
+# ---------------------------------------------------------------------------
+
+
+def policy_for(cfg: ArchConfig, shape: ShapeSpec, mesh, *, overrides=None) -> ShardingPolicy:
+    ov = overrides or {}
+    model = 1
+    try:
+        model = mesh.shape["model"]
+    except Exception:
+        pass
+    params_f32 = 4 * cfg.param_counts()["total_with_emb"]
+    zero3 = ov.get("zero3")
+    if zero3 is None:
+        # FSDP when TP alone leaves >2 GB of fp32 master weights per device
+        # (leaves room for grads + accumulators + activations in 16 GB HBM)
+        zero3 = params_f32 / max(model, 1) > 2 * 1024**3
+    return ShardingPolicy(
+        mesh=mesh,
+        expert_parallel=ov.get("expert_parallel", False),
+        zero3=zero3,
+        zero1=ov.get("zero1", True),
+        seq_shard_cache=(shape.name == "long_500k"),
+        cache_kv_heads=cfg.n_kv_heads,
+    )
+
+
+def shardings_for_tree(tree, mesh, spec_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(_path_str(path), tuple(leaf.shape))),
+        tree,
+    )
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# lowering per cell
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    overrides: Optional[Dict] = None,
+    tc: Optional[TrainConfig] = None,
+):
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = policy_for(cfg, shape, mesh, overrides=overrides)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        # default microbatching: keep ≈2 sequences per device per microstep
+        data_par = mesh.devices.size // mesh.shape.get("model", 1)
+        per_dev = max(shape.global_batch // max(data_par, 1), 1)
+        default_micro = max(per_dev // 2, 1)
+        big = 4 * cfg.param_counts()["total_with_emb"] / max(
+            mesh.shape.get("model", 1), 1
+        ) > 2 * 1024**3
+        tc = tc or TrainConfig(
+            optimizer=AdamWConfig(
+                moments_dtype="int8" if cfg.param_counts()["total"] > 1e11 else "float32",
+                # big archs: bf16 live params + f32 master in opt state —
+                # halves FSDP weight-gathers and gradient reductions
+                master_dtype="float32" if big else "none",
+            ),
+            n_microbatches=(overrides or {}).get("n_microbatches", default_micro),
+        )
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(cfg, tc, jax.random.PRNGKey(0))
+        )
+
+        def state_spec(path, shp):
+            if path.startswith("params/"):
+                return policy.param_spec(path[len("params/"):], shp)
+            if path.startswith("opt/"):
+                return policy.opt_spec(path.split("/", 2)[-1], shp)
+            return P()
+
+        state_sh = shardings_for_tree(state_shapes, mesh, state_spec)
+        batch_shapes = train_input_specs(cfg, shape)
+        batch_sh = {
+            k: NamedSharding(mesh, policy.batch_spec(tuple(v.shape)))
+            for k, v in batch_shapes.items()
+        }
+        step = make_train_step(cfg, tc, param_shardings=state_sh.params)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        with mesh, activation_sharding(policy.dp_axes):
+            lowered = jitted.lower(state_shapes, batch_shapes)
+
+    elif shape.kind == "prefill":
+        params_shapes = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+        params_sh = shardings_for_tree(
+            params_shapes, mesh, lambda p, s: policy.param_spec(p, s)
+        )
+        batch_shapes = prefill_input_specs(cfg, shape)
+        batch_sh = {
+            k: NamedSharding(mesh, policy.batch_spec(tuple(v.shape)))
+            for k, v in batch_shapes.items()
+        }
+        fn = lambda p, b: transformer.prefill(p, b, cfg, max_seq=shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+        with mesh, activation_sharding(policy.dp_axes):
+            lowered = jitted.lower(params_shapes, batch_shapes)
+
+    else:  # decode
+        params_shapes = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+        params_sh = shardings_for_tree(
+            params_shapes, mesh, lambda p, s: policy.param_spec(p, s)
+        )
+        tokens, caches, pos = decode_input_specs(cfg, shape)
+        caches_sh = shardings_for_tree(
+            caches, mesh, lambda p, s: policy.cache_spec(p, s)
+        )
+        tok_sh = NamedSharding(mesh, policy.batch_spec(tuple(tokens.shape)))
+        pos_sh = NamedSharding(mesh, policy.batch_spec(tuple(pos.shape)))
+        fn = lambda p, t, c, s: transformer.decode_step(p, t, c, s, cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_sh, tok_sh, caches_sh, pos_sh),
+            out_shardings=(None, caches_sh),
+            donate_argnums=(2,),
+        )
+        with mesh, activation_sharding(policy.dp_axes):
+            lowered = jitted.lower(params_shapes, tokens, caches, pos)
+
+    return lowered, mesh, policy, cfg, shape, time.time() - t0
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    overrides: Optional[Dict] = None,
+    hlo_out: Optional[str] = None,
+) -> Dict[str, Any]:
+    lowered, mesh, policy, cfg, shape, lower_s = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, overrides=overrides
+    )
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    if hlo_out:
+        with open(hlo_out, "w") as f:
+            f.write(hlo)
+    hc = analyze_hlo(hlo)
+    n_chips = mesh.devices.size
+
+    result: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "chips": int(n_chips),
+        "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1),
+        "overrides": overrides or {},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+        },
+        "xla_cost": {k: cost.get(k, 0.0) for k in ("flops", "bytes accessed") if cost},
+        "hlo_cost": hc.as_dict(),
+        "policy_fallbacks": policy.explain(),
+    }
+    result["roofline"] = roofline_report(
+        cfg, shape, hc, n_chips=n_chips, xla_cost=result["xla_cost"],
+        memory=result["memory"],
+    )
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape name (default: all)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument(
+        "--multi-pod", choices=("off", "on", "both"), default="off", dest="multi_pod"
+    )
+    ap.add_argument("-o", "--out-dir", default=None)
+    ap.add_argument("--hlo-dir", default=None, help="dump partitioned HLO per cell")
+    ap.add_argument("--override", action="append", default=[],
+                    help="policy override key=value (e.g. expert_parallel=1)")
+    args = ap.parse_args(argv)
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        overrides[k] = int(v) if v.isdigit() else v
+    archs = [args.arch] if args.arch else list_archs()
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for sname, _spec in shape_cells(arch):
+            if args.shape and sname != args.shape:
+                continue
+            for mp in pods:
+                tag = f"{arch}--{sname}--{'pod2' if mp else 'pod1'}"
+                hlo_out = f"{args.hlo_dir}/{tag}.hlo" if args.hlo_dir else None
+                try:
+                    res = run_cell(
+                        arch, sname, multi_pod=mp, overrides=overrides or None,
+                        hlo_out=hlo_out,
+                    )
+                    line = (
+                        f"{tag}: OK compile={res['compile_s']}s "
+                        f"mem/dev={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                        f"bottleneck={res['roofline']['bottleneck']}"
+                    )
+                    print(line, flush=True)
+                    if args.out_dir:
+                        os.makedirs(args.out_dir, exist_ok=True)
+                        with open(f"{args.out_dir}/{tag}.json", "w") as f:
+                            json.dump(res, f, indent=1)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((tag, repr(e)))
+                    print(f"{tag}: FAIL {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        return 1
+    print("\nall cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

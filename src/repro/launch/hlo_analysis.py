@@ -1,0 +1,308 @@
+"""Post-SPMD HLO cost model: loop-aware FLOPs / HBM bytes / collectives.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once** (verified in
+EXPERIMENTS.md §Dry-run methodology), which under scan-over-layers
+understates a 96-layer model by ~96×. This module parses the partitioned
+HLO text instead and walks the computation call graph:
+
+  * every computation gets a **multiplier** = Σ over callers of
+    (caller multiplier × trip count) — ``while`` bodies contribute their
+    ``known_trip_count`` (XLA records it in backend_config), fusions and
+    ``call``s contribute 1, conditionals contribute 1 per branch
+    (upper bound),
+  * **FLOPs**: ``dot`` ops contribute 2 × |output| × contracted-size —
+    shapes and ``lhs_contracting_dims`` parsed from the op line.
+    (convolutions lower to dots or elementwise here; elementwise FLOPs are
+    bandwidth-shadowed and excluded, as in standard MXU rooflines),
+  * **HBM bytes**: the traffic model charges each *top-level* op in a
+    non-fusion computation (operands + outputs); ops inside fusion
+    computations are free (fused intermediates never hit HBM). This is
+    the fusion-boundary model XLA's own memory analysis uses,
+  * **collectives**: operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (async ``-start``
+    counted, ``-done`` skipped), × the computation multiplier.
+
+The result feeds launch/roofline.py; raw cost_analysis numbers ride along
+in the dry-run JSON for cross-checking.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_CALLSITE_SINGLE_RE = re.compile(r"(body|condition|to_apply|calls)=%([\w.\-]+)")
+_CALLSITE_LIST_RE = re.compile(r"(calls|branch_computations)=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{ ]+n[\"': ]+\"?(\d+)")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_NO_TRAFFIC_OPS = (
+    "parameter", "constant", "tuple(", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Comp:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    is_fusion_target: bool = False
+    trip_if_body: int = 1
+
+
+@dataclass
+class HloCost:
+    dot_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    per_collective: Dict[str, float]
+    collective_counts: Dict[str, int]
+    multipliers: Dict[str, float]
+
+    def as_dict(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "per_collective": self.per_collective,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    current: Optional[_Comp] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//") or line.startswith("#"):
+            continue
+        m = _COMP_HEADER_RE.match(line)
+        if m and "->" in line and line.rstrip().endswith("{"):
+            name = m.group(1)
+            current = comps.setdefault(name, _Comp(name))
+            if raw.startswith("ENTRY") or line.startswith("ENTRY"):
+                entry = name
+            continue
+        if line == "}":
+            current = None
+            continue
+        if current is not None and "=" in line:
+            current.lines.append(line)
+    return comps, entry
+
+
+def _call_edges(comps: Dict[str, _Comp]) -> Dict[str, List[Tuple[str, float]]]:
+    """callee → [(caller, multiplier_per_caller_execution)]"""
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for comp in comps.values():
+        for line in comp.lines:
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = float(tm.group(1))
+            is_while = " while(" in line or "= while(" in line
+            is_fusion = " fusion(" in line
+            seen = set()
+            for cm in _CALLSITE_SINGLE_RE.finditer(line):
+                kind, callee = cm.group(1), cm.group(2)
+                if callee not in comps or callee in seen:
+                    continue
+                seen.add(callee)
+                mult = trip if (is_while and kind == "body") else 1.0
+                edges.setdefault(callee, []).append((comp.name, mult))
+                if is_fusion and kind == "calls":
+                    comps[callee].is_fusion_target = True
+            for cm in _CALLSITE_LIST_RE.finditer(line):
+                kind = cm.group(1)
+                for raw_name in re.split(r",\s*", cm.group(2)):
+                    callee = raw_name.strip().lstrip("%")
+                    if callee not in comps or callee in seen:
+                        continue
+                    seen.add(callee)
+                    edges.setdefault(callee, []).append((comp.name, 1.0))
+                    if is_fusion and kind == "calls":
+                        comps[callee].is_fusion_target = True
+    return edges
+
+
+def _multipliers(comps: Dict[str, _Comp], entry: Optional[str]) -> Dict[str, float]:
+    edges = _call_edges(comps)
+    mult: Dict[str, float] = {}
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def of(name: str) -> float:
+        if name == entry:
+            return 1.0
+        callers = edges.get(name)
+        if not callers:
+            # unreachable from entry (e.g. dead comps): count once if entry
+            return 1.0 if entry is None else 0.0
+        return sum(of(c) * m for c, m in callers)
+
+    for name in comps:
+        try:
+            mult[name] = of(name)
+        except RecursionError:  # pragma: no cover - malformed HLO
+            mult[name] = 1.0
+    return mult
+
+
+_LHS_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _symbol_table(comps: Dict[str, _Comp]) -> Dict[str, int]:
+    """op name → output bytes, from each line's LHS/declared shape.
+    Scheduled HLO omits operand shapes, so consumers look producers up."""
+    table: Dict[str, int] = {}
+    for comp in comps.values():
+        for line in comp.lines:
+            m = _LHS_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            # the declared output shape is the first shape on the RHS
+            sm = _SHAPE_RE.search(rhs)
+            nbytes = 0
+            if sm is not None and sm.group(1) in _DTYPE_BYTES:
+                n = 1
+                for d in sm.group(2).split(","):
+                    if d:
+                        n *= int(d)
+                nbytes = n * _DTYPE_BYTES[sm.group(1)]
+            else:
+                # tuple outputs: sum every shape before the op name
+                head = rhs.split("(", 1)[0]
+                nbytes = _shape_bytes(head)
+            table[name] = nbytes
+    return table
+
+
+def _out_dims(rhs: str) -> List[int]:
+    return _dims_of(rhs)
+
+
+def _dot_flops_of_line(line: str, shapes: Dict[str, List[int]]) -> float:
+    """2 × |out| × contracted_size for a `dot(` line (symbol-table lookup
+    for the lhs operand's dims)."""
+    m = _LHS_RE.match(line)
+    if not m:
+        return 0.0
+    rhs = m.group(2)
+    out_dims = _dims_of(rhs)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    cm = _DOT_CONTRACT_RE.search(line)
+    args = rhs[rhs.index("dot(") + 4 :]
+    ops = _OPERAND_RE.findall(args.split(")", 1)[0])
+    csize = 1
+    if cm and ops:
+        lhs_dims = shapes.get(ops[0], [])
+        for ci in cm.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                csize *= lhs_dims[int(ci)]
+    return 2.0 * out_n * csize
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = _split_computations(hlo)
+    mult = _multipliers(comps, entry)
+    byte_table = _symbol_table(comps)
+
+    # dims table for dot contraction lookup
+    dims_table: Dict[str, List[int]] = {}
+    for comp in comps.values():
+        for line in comp.lines:
+            m = _LHS_RE.match(line)
+            if m:
+                dims_table[m.group(1)] = _dims_of(m.group(2))
+    # parameters inside computations: `%p = f32[...] parameter(0)` handled
+    # by the same LHS scan above.
+
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    per_coll: Dict[str, float] = {k: 0.0 for k in _COLL_OPS}
+    coll_counts: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        for line in comp.lines:
+            lm = _LHS_RE.match(line)
+            if not lm:
+                continue
+            rhs = lm.group(2)
+            # ---- collectives (counted anywhere) ----
+            matched_coll = False
+            for op in _COLL_OPS:
+                if f" {op}(" in rhs or rhs.startswith(f"{op}(") or f" {op}-start(" in rhs:
+                    per_coll[op] += byte_table.get(lm.group(1), 0) * m
+                    coll_counts[op] += 1
+                    matched_coll = True
+                    break
+                if f" {op}-done(" in rhs:
+                    matched_coll = True
+                    break
+            # ---- dot flops (counted anywhere incl. inside fusions) ----
+            if " dot(" in rhs:
+                dot_flops += _dot_flops_of_line(line, dims_table) * m
+            # ---- HBM traffic at fusion boundaries ----
+            if comp.is_fusion_target:
+                continue  # fused internals don't touch HBM
+            if matched_coll:
+                continue  # collective bytes tracked separately
+            if any(op in rhs for op in _NO_TRAFFIC_OPS):
+                continue
+            if " while(" in rhs or " conditional(" in rhs or " call(" in rhs:
+                continue  # bodies charged directly
+            out_b = byte_table.get(lm.group(1), 0)
+            opnames = _OPERAND_RE.findall(rhs.split("(", 1)[1] if "(" in rhs else "")
+            in_b = sum(byte_table.get(o, 0) for o in opnames)
+            hbm_bytes += (out_b + in_b) * m
+
+    return HloCost(
+        dot_flops=dot_flops,
+        hbm_bytes=hbm_bytes,
+        collective_bytes=sum(per_coll.values()),
+        per_collective=per_coll,
+        collective_counts=coll_counts,
+        multipliers=mult,
+    )

@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Single pod: ``(data=16, model=16)`` = 256 TPU v5e chips.
+Multi-pod:  ``(pod=2, data=16, model=16)`` = 512 chips; the ``pod`` axis is
+an additional pure-DP axis crossing the inter-pod DCN links (its
+collectives are the expensive ones — see EXPERIMENTS.md §Roofline).
+
+``make_production_mesh`` is a function, not a module constant: importing
+this module must never touch jax device state (the dry-run sets
+``XLA_FLAGS`` before first jax init; tests must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+#: v5e hardware constants used by the roofline analysis
+TPU_V5E = {
+    "peak_bf16_flops": 197e12,  # per chip
+    "hbm_bw": 819e9,  # B/s per chip
+    "ici_link_bw": 50e9,  # B/s per link
+    "hbm_bytes": 16 * 1024**3,
+    "vmem_bytes": 128 * 1024**2,
+    "dcn_bw": 25e9,  # per host, inter-pod
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (elastic re-shapes, tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything that isn't 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON directory.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+
+import json
+import os
+import sys
+from collections import defaultdict
+
+ARCH_ORDER = [
+    "granite-20b", "mistral-nemo-12b", "nemotron-4-340b", "h2o-danube3-4b",
+    "jamba-v0.1-52b", "granite-moe-3b-a800m", "moonshot-v1-16b-a3b",
+    "llava-next-34b", "whisper-base", "mamba2-130m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SKIPPED_LONG = [
+    "granite-20b", "mistral-nemo-12b", "nemotron-4-340b",
+    "granite-moe-3b-a800m", "moonshot-v1-16b-a3b", "llava-next-34b",
+    "whisper-base",
+]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def load(dirname):
+    cells = {}
+    for fn in os.listdir(dirname):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(dirname, fn)))
+        cells[(r["arch"], r["shape"], "pod2" if r["multi_pod"] else "pod1")] = r
+    return cells
+
+
+def roofline_table(cells, mesh="pod1"):
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck "
+        "| useful | roofline | mem/dev GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, mesh))
+            if r is None:
+                if shape == "long_500k" and arch in SKIPPED_LONG:
+                    lines.append(
+                        f"| {arch} | {shape} | — | — | — | *skipped: "
+                        f"full attention (DESIGN.md §4)* | — | — | — | — |"
+                    )
+                continue
+            rl = r["roofline"]
+            mem = r["memory"]["peak_bytes_per_device"] / 2**30
+            fits = "yes" if mem <= 16.0 else f"**no**"
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} "
+                f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+                f"| {rl['bottleneck']} | {rl['useful_flops_ratio']:.2f} "
+                f"| {rl['roofline_fraction']*100:.1f}% | {mem:.1f} | {fits} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(cells):
+    lines = [
+        "| arch | shape | mesh | compile s | FLOPs/chip | HBM B/chip "
+        "| coll B/chip | dominant collective |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod1", "pod2"):
+                r = cells.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                rl = r["roofline"]
+                per = rl["per_collective_bytes"]
+                dom = max(per, key=per.get) if any(per.values()) else "—"
+                lines.append(
+                    f"| {arch} | {shape} | {r['mesh']} | {r['compile_s']} "
+                    f"| {rl['dot_flops_per_chip']:.2e} "
+                    f"| {rl['hbm_bytes_per_chip']:.2e} "
+                    f"| {rl['collective_bytes_per_chip']:.2e} | {dom} |"
+                )
+    return "\n".join(lines)
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    cells = load(dirname)
+    print("## Roofline (single pod, 16×16 = 256 chips)\n")
+    print(roofline_table(cells, "pod1"))
+    print(f"\ncells loaded: {len(cells)}")
+    print("\n## Dry-run raw (both meshes)\n")
+    print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

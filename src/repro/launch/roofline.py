@@ -1,0 +1,114 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = dot_FLOPs_per_chip / 197e12
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9 (per-link ICI)
+
+All three come from :mod:`.hlo_analysis`, the loop-aware HLO cost model
+(``compiled.cost_analysis()`` counts while-loop bodies once — verified —
+so its numbers ride along in the dry-run JSON only as a cross-check).
+
+``MODEL_FLOPS`` (6·N_active·tokens for training, 2·N_active + cache reads
+per decoded token) anchors the *useful fraction*:
+``useful_ratio = MODEL_FLOPS/chips ÷ dot_FLOPs/chip`` — below 1 means the
+compiled step does extra work (remat recompute, masked attention blocks,
+replicated compute on the model axis) and exactly how much.
+
+``roofline_fraction`` is the score: time the chip would spend at peak on
+useful FLOPs ÷ the dominant roofline term.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+from .hlo_analysis import HloCost, analyze_hlo
+from .mesh import TPU_V5E
+
+__all__ = ["roofline_report", "model_flops", "analyze_hlo"]
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Analytic useful FLOPs for the whole cell (all chips), forward(+bwd).
+
+    Includes the unembedding projection (V·D per token) — for small-active
+    / large-vocab models (mamba2, granite-moe, whisper) the CE matmul is a
+    dominant, *legitimate* part of the work, and excluding it made the
+    useful-FLOPs ratio read as waste (§Perf iteration 3)."""
+    n_active = cfg.param_counts()["active"] + cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        # prefill emits only last-token logits: unembed once per sequence
+        n_body = cfg.param_counts()["active"]
+        return 2.0 * n_body * tokens + 2.0 * cfg.vocab_size * cfg.d_model * shape.global_batch
+    # decode: one token per sequence; attention over the cache is real work
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "a")
+    window = cfg.sliding_window or shape.seq_len
+    ctx = min(shape.seq_len, window)
+    per_tok_attn = 2.0 * n_attn * 2 * cfg.kv_dim * ctx  # QK^T + PV
+    return shape.global_batch * (2.0 * n_active + per_tok_attn)
+
+
+def roofline_report(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    hlo_cost: HloCost,
+    *,
+    n_chips: int,
+    xla_cost: Optional[Dict[str, float]] = None,
+    memory: Optional[Dict[str, float]] = None,
+) -> Dict[str, Any]:
+    peak = TPU_V5E["peak_bf16_flops"]
+    hbm = TPU_V5E["hbm_bw"]
+    link = TPU_V5E["ici_link_bw"]
+
+    flops = hlo_cost.dot_flops  # per chip (the HLO is the per-device module)
+    bytes_ = hlo_cost.hbm_bytes
+    coll = hlo_cost.collective_bytes
+
+    compute_s = flops / peak
+    memory_s = bytes_ / hbm
+    collective_s = coll / link
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    useful_per_chip = mf / n_chips
+    bound = max(terms[bottleneck], 1e-30)
+    return {
+        "dot_flops_per_chip": flops,
+        "hbm_bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": coll,
+        "per_collective_bytes": hlo_cost.per_collective,
+        "collective_counts": hlo_cost.collective_counts,
+        "model_flops_total": mf,
+        "model_flops_per_chip": useful_per_chip,
+        "useful_flops_ratio": useful_per_chip / flops if flops else 0.0,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "bound_s": bound,
+        "step_time_lower_bound_s": max(compute_s, memory_s, collective_s),
+        "roofline_fraction": (useful_per_chip / peak) / bound,
+        "xla_cost_reference": dict(xla_cost or {}),
+    }
+
+
+def format_row(res: Dict[str, Any]) -> str:
+    r = res["roofline"]
+    return (
+        f"| {res['arch']} | {res['shape']} | {res['mesh']} "
+        f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+        f"| {r['collective_s']*1e3:.1f} | {r['bottleneck']} "
+        f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']*100:.1f}% "
+        f"| {res['memory']['peak_bytes_per_device']/2**30:.1f} |"
+    )

@@ -1,0 +1,342 @@
+"""Attention: GQA/MQA, sliding windows, chunked flash, KV-cache decode.
+
+Three execution paths, all numerically equivalent (tested):
+
+  * **dense** — materialized scores, for short sequences (smoke tests).
+  * **chunked flash** — online-softmax over (q-block, kv-block) pairs.
+    The pair list is built *statically at trace time* and, for causal or
+    sliding-window masks, only the needed pairs are emitted — the HLO
+    carries exactly-triangular FLOPs instead of the 2× of mask-everything
+    schedules. This is the SplashAttention idea expressed in pure JAX
+    (`lax.scan` over the pair list, `dynamic_update_slice` accumulators).
+  * **decode** — one query position against a (possibly ring) KV cache
+    with explicit per-slot absolute positions, which makes sliding-window
+    ring buffers and ragged batches exact.
+
+GQA is computed grouped (``[B, Hkv, G, S, D]``) — KV is never repeated to
+Hq, so MQA (granite-20b, G=48) reads each KV head once.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, cfg.q_dim),
+        "wk": dense_init(ks[1], d, cfg.kv_dim),
+        "wv": dense_init(ks[2], d, cfg.kv_dim),
+        "wo": dense_init(ks[3], cfg.q_dim, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions, *, rope: bool):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if rope and cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# dense path (short sequences)
+# ---------------------------------------------------------------------------
+
+
+def _dense_attention(q, k, v, *, causal: bool, window: Optional[int], bias=None):
+    """q: [B,S,Hq,D]; k,v: [B,Skv,Hkv,D] → [B,S,Hq,D]."""
+    b, s, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if causal or window:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        offset = skv - s  # queries are the trailing positions
+        mask = jnp.ones((s, skv), bool)
+        if causal:
+            mask &= ki <= qi + offset
+        if window:
+            mask &= (qi + offset) - ki < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, s, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash path (static pair list, exactly-causal FLOPs)
+# ---------------------------------------------------------------------------
+
+
+def _kv_range(i: int, nkv: int, q_chunk: int, kv_chunk: int,
+              *, causal: bool, window: Optional[int], offset: int):
+    """Static [lo, hi) kv-block range containing unmasked work for q-block i."""
+    q_lo = i * q_chunk + offset
+    q_hi = (i + 1) * q_chunk - 1 + offset
+    hi = nkv
+    if causal:
+        hi = min(nkv, q_hi // kv_chunk + 1)
+    lo = 0
+    if window is not None:
+        lo = max(0, (q_lo - window + 1) // kv_chunk)
+    return lo, max(hi, lo + 1)
+
+
+def _flash_attention(q, k, v, *, causal: bool, window: Optional[int],
+                     q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax attention, blocked for memory and FLOPs.
+
+    Q-blocks are *independent*: a static python loop emits one
+    ``jax.checkpoint``-wrapped computation per q-block whose kv-scan covers
+    exactly the statically-needed [lo, hi) block range (causal triangle /
+    sliding window). The HLO carries exactly-needed FLOPs, and backward
+    memory is O(one block) — the scan-carry trajectory of a fused-pairs
+    formulation would otherwise store every q-block's accumulator per step
+    (measured 61 GiB/device on granite-20b train_4k; see EXPERIMENTS.md).
+    """
+    b, s, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, skv)
+    assert s % q_chunk == 0 and skv % kv_chunk == 0, (s, q_chunk, skv, kv_chunk)
+    nq, nkv = s // q_chunk, skv // kv_chunk
+    offset = skv - s
+    scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, nq, q_chunk, hkv, g, d)
+    kb = k.reshape(b, nkv, kv_chunk, hkv, d)
+    vb = v.reshape(b, nkv, kv_chunk, hkv, d)
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    @functools.partial(jax.checkpoint, static_argnums=(3, 4))
+    def one_q_block(qi, kjs, vjs, i, lo):
+        """qi: [b,qc,hkv,g,d]; kjs/vjs: [b,nj,kc,hkv,d] for blocks lo..hi."""
+
+        def body(carry, xs):
+            m_i, l_i, a_i = carry
+            kj, vj, jrel = xs
+            scores = jnp.einsum("bqhgd,bkhd->bqhgk", qi, kj).astype(jnp.float32) * scale
+            qpos = i * q_chunk + q_pos_base + offset
+            kpos = (lo + jrel) * kv_chunk + k_pos_base
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+            m_ij = jnp.max(scores, axis=-1)
+            m_new = jnp.maximum(m_i, m_ij)
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m_i - m_new)
+            l_new = l_i * alpha + p.sum(axis=-1)
+            a_new = a_i * alpha[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, a_new), None
+
+        nj = kjs.shape[1]
+        m0 = jnp.full((b, q_chunk, hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, hkv, g, d), jnp.float32)
+        (m_f, l_f, a_f), _ = jax.lax.scan(
+            body,
+            (m0, l0, a0),
+            (jnp.moveaxis(kjs, 1, 0), jnp.moveaxis(vjs, 1, 0),
+             jnp.arange(nj, dtype=jnp.int32)),
+        )
+        return (a_f / jnp.maximum(l_f[..., None], 1e-30)).astype(q.dtype)
+
+    outs = []
+    for i in range(nq):
+        lo, hi = _kv_range(i, nkv, q_chunk, kv_chunk,
+                           causal=causal, window=window, offset=offset)
+        out_i = one_q_block(qg[:, i], kb[:, lo:hi], vb[:, lo:hi], i, lo)
+        outs.append(out_i)
+    out = jnp.stack(outs, axis=1)  # [b, nq, qc, hkv, g, d]
+    return out.reshape(b, s, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+DENSE_MAX_SEQ = 2048  # beyond this, use the chunked flash path
+
+
+def attention_forward(
+    params: Params,
+    x: jnp.ndarray,  # [B, S, D]
+    cfg,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
+    window = cfg.sliding_window
+    if s <= DENSE_MAX_SEQ:
+        out = _dense_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = _flash_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out.reshape(b, s, cfg.q_dim) @ params["wo"].astype(x.dtype)
+
+
+def cross_attention_forward(
+    params: Params,
+    x: jnp.ndarray,  # [B, S, D] decoder states
+    enc_kv: Tuple[jnp.ndarray, jnp.ndarray],  # precomputed (k, v): [B, Senc, Hkv, D]
+    cfg,
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype).reshape(1, 1, cfg.n_heads, hd)
+    k, v = enc_kv
+    out = _dense_attention(q, k, v, causal=False, window=None)
+    return out.reshape(b, s, cfg.q_dim) @ params["wo"].astype(x.dtype)
+
+
+def encode_cross_kv(params: Params, enc_out: jnp.ndarray, cfg):
+    """Precompute cross-attention K/V from encoder output (cached once)."""
+    b, senc, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(b, senc, cfg.n_kv_heads, hd)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(b, senc, cfg.n_kv_heads, hd)
+    if "bk" in params:
+        k = k + params["bk"].astype(k.dtype).reshape(1, 1, cfg.n_kv_heads, hd)
+        v = v + params["bv"].astype(v.dtype).reshape(1, 1, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Ring-capable KV cache. ``pos`` holds the absolute position stored in
+    each slot (-1 = empty), making sliding windows and ragged decode exact."""
+
+    k: jnp.ndarray  # [B, W, Hkv, D]
+    v: jnp.ndarray  # [B, W, Hkv, D]
+    pos: jnp.ndarray  # [B, W] int32
+
+
+def init_kv_cache(batch: int, slots: int, cfg, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        pos=jnp.full((batch, slots), -1, jnp.int32),
+    )
+
+
+def cache_slots(cfg, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def decode_attention(
+    params: Params,
+    x: jnp.ndarray,  # [B, 1, D]
+    cache: KVCache,
+    step_pos: jnp.ndarray,  # [B] absolute position of the new token
+    cfg,
+) -> Tuple[jnp.ndarray, KVCache]:
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(params, x, cfg, step_pos[:, None], rope=True)
+
+    slots = cache.k.shape[1]
+    slot = (step_pos % slots).astype(jnp.int32)  # ring write
+    bi = jnp.arange(b)
+    k = cache.k.at[bi, slot].set(k_new[:, 0])
+    v = cache.v.at[bi, slot].set(v_new[:, 0])
+    pos = cache.pos.at[bi, slot].set(step_pos.astype(jnp.int32))
+
+    # attention over all slots with validity/window masking via slot pos
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= step_pos[:, None])
+    if cfg.sliding_window is not None:
+        valid &= (step_pos[:, None] - pos) < cfg.sliding_window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(b, 1, cfg.q_dim)
+    y = out @ params["wo"].astype(x.dtype)
+    return y, KVCache(k, v, pos)
+
+
+def prefill_into_cache(
+    params: Params,
+    x: jnp.ndarray,  # [B, S, D]
+    cfg,
+    slots: int,
+) -> Tuple[jnp.ndarray, KVCache]:
+    """Full-sequence attention that also populates a decode cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
+    window = cfg.sliding_window
+    if s <= DENSE_MAX_SEQ:
+        out = _dense_attention(q, k, v, causal=True, window=window)
+    else:
+        out = _flash_attention(q, k, v, causal=True, window=window)
+    y = out.reshape(b, s, cfg.q_dim) @ params["wo"].astype(x.dtype)
+
+    # write the trailing `slots` positions into the ring
+    take = min(slots, s)
+    k_tail = k[:, s - take :]
+    v_tail = v[:, s - take :]
+    tail_pos = jnp.arange(s - take, s, dtype=jnp.int32)
+    cache = init_kv_cache(b, slots, cfg, x.dtype)
+    slot_idx = tail_pos % slots
+    ck = cache.k.at[:, slot_idx].set(k_tail)
+    cv = cache.v.at[:, slot_idx].set(v_tail)
+    cp = cache.pos.at[:, slot_idx].set(tail_pos[None, :])
+    return y, KVCache(ck, cv, cp)

@@ -1,0 +1,215 @@
+"""Core model layers: norms, embeddings, MLPs, rotary embeddings.
+
+Functional style throughout: parameters are nested dicts of ``jnp``
+arrays, every layer is ``apply(params, x, ...) -> y``. Parameters are
+kept in float32 (optimizer master dtype); activations run in the config's
+compute dtype (bf16 on TPU) with float32 accumulation where it matters
+(softmax, norms, logits).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: Optional[float] = None) -> jnp.ndarray:
+    """Truncated-normal fan-in init (the MaxText/T5 default)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+
+
+def embed_init(key, vocab: int, d: int) -> jnp.ndarray:
+    # GPT-style 0.02 std — keeps tied-unembedding logits O(1) at init.
+    return 0.02 * jax.random.normal(key, (vocab, d), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(params: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations & MLP
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def init_mlp(key, d_model: int, d_ff: int, glu: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "wi": dense_init(ks[0], d_model, d_ff),
+        "wo": dense_init(ks[1], d_ff, d_model),
+    }
+    if glu:
+        p["wg"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def apply_mlp(params: Params, x: jnp.ndarray, activation: str, glu: bool) -> jnp.ndarray:
+    act = activation_fn(activation)
+    h = x @ params["wi"].astype(x.dtype)
+    if glu:
+        h = act(x @ params["wg"].astype(x.dtype)) * h
+    else:
+        h = act(h)
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(embedding: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(embedding, tokens, axis=0).astype(dtype)
+
+
+def logits_from_hidden(
+    x: jnp.ndarray,
+    embedding: jnp.ndarray,
+    head: Optional[jnp.ndarray],
+    *,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Final projection; fp32 logits (loss numerics)."""
+    w = embedding.T if head is None else head
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, *, ignore_index: int = -100
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over non-ignored positions. Returns (loss, n_tokens)."""
+    mask = labels != ignore_index
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / n, n
+
+
+# Materializing [B, S, V] float32 logits dominates training memory for
+# big-vocab models (mamba2: 50k vocab × 4k seq = 13 GB/device). Above this
+# element budget the loss is computed chunked over the sequence.
+CE_CHUNK_ELEMENTS = 1 << 26  # 64M logits (256 MB f32) per chunk
+
+
+def chunked_cross_entropy(
+    hidden: jnp.ndarray,  # [B, S, D]
+    w: jnp.ndarray,  # [D, V] unembedding (head or embedding.T)
+    labels: jnp.ndarray,  # [B, S]
+    *,
+    softcap: Optional[float] = None,
+    ignore_index: int = -100,
+    chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CE without materializing full logits: ``lax.scan`` over sequence
+    chunks, each chunk's logits rematerialized in the backward
+    (``jax.checkpoint``). The unembedding cotangent accumulates across
+    chunks inside the scan — one [D, V(shard)] f32 buffer, not S of them."""
+    b, s, d = hidden.shape
+    v = w.shape[-1]
+    if chunk is None:
+        chunk = max(min(s, CE_CHUNK_ELEMENTS // max(b * v, 1)), 16)
+        while s % chunk:
+            chunk -= 1
+    n_chunks = s // chunk
+
+    hc = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)  # [n, B, c, D]
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, n_sum = carry
+        h, lab = xs
+        logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = lab != ignore_index
+        safe = jnp.where(mask, lab, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + ((logz - gold) * mask).sum()
+        n_sum = n_sum + mask.sum()
+        return (nll_sum, n_sum), None
+
+    (nll, n), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc)
+    )
+    n = jnp.maximum(n, 1)
+    return nll / n, n

@@ -1,0 +1,238 @@
+"""Mamba-2 SSD (state-space duality) blocks: chunked scan + O(1) decode.
+
+The SSD formulation (Dao & Gu 2024) evaluates the selective state-space
+recurrence
+
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t ,   y_t = C_t · h_t + D·x_t
+
+blockwise: within a chunk of Q timesteps the quadratic "attention-like"
+form runs on the MXU; across chunks a small [H, P, N] state is carried by
+a ``lax.scan``. Decode is the recurrence itself — O(1) state per layer,
+which is what qualifies the ssm/hybrid architectures for ``long_500k``.
+
+**TP layout**: projections are kept *separate* (z, x, B|C, dt) rather than
+fused, so the tensor-parallel sharding is head-aligned: x/z shard on
+``d_inner`` (⇒ heads shard, since head_dim stays intact), dt shards on
+heads, the tiny group B/C projections replicate, and ``out_proj``
+row-shards back to d_model (one psum). A fused in_proj would slice a
+model-sharded dimension at non-boundary offsets and force reshards —
+measured and rejected in EXPERIMENTS.md §Perf.
+
+Both the hybrid (Jamba) and pure-SSM (mamba2-130m) architectures lower
+through this module (DESIGN.md §5 records the Mamba-1→SSD substitution
+for Jamba).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_norm, dense_init, init_norm
+
+
+class SSMState(NamedTuple):
+    """Decode-time carry for one SSD block."""
+
+    h: jnp.ndarray  # [B, H, P, N] state
+    conv_x: jnp.ndarray  # [B, d_conv-1, di] conv tail (x path)
+    conv_bc: jnp.ndarray  # [B, d_conv-1, 2·G·N] conv tail (B|C path)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    return s, d, di, nh, gn
+
+
+def init_ssm(key, cfg) -> Params:
+    s, d, di, nh, gn = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "z_proj": dense_init(ks[0], d, di),
+        "x_proj": dense_init(ks[1], d, di),
+        "bc_proj": dense_init(ks[2], d, 2 * gn),
+        "dt_proj": dense_init(ks[3], d, nh),
+        "conv_x_w": 0.1 * jax.random.normal(ks[4], (s.d_conv, di), jnp.float32),
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_bc_w": 0.1 * jax.random.normal(ks[5], (s.d_conv, 2 * gn), jnp.float32),
+        "conv_bc_b": jnp.zeros((2 * gn,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jnp.exp(
+                    jax.random.uniform(ks[6], (nh,), jnp.float32)
+                    * (math.log(s.dt_max) - math.log(s.dt_min))
+                    + math.log(s.dt_min)
+                )
+            )
+            - 1.0
+            + 1e-6
+        ),  # inverse-softplus of U(dt_min, dt_max)
+        "norm": init_norm("rmsnorm", di),
+        "out_proj": dense_init(ks[7], di, d),
+    }
+    return p
+
+
+def _causal_conv(w, b, x, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time. x: [B, L, C]; w: [K, C].
+    Returns (silu(conv(x)), new tail [B, K-1, C])."""
+    k = w.shape[0]
+    wd = w.astype(x.dtype)
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, L+K-1, C]
+    out = sum(xp[:, i : i + x.shape[1]] * wd[i] for i in range(k))
+    out = out + b.astype(x.dtype)
+    new_tail = xp[:, -(k - 1) :] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu(out), new_tail
+
+
+def _project(params, x, cfg):
+    z = x @ params["z_proj"].astype(x.dtype)  # [B, L, di]
+    xs = x @ params["x_proj"].astype(x.dtype)  # [B, L, di]
+    bc = x @ params["bc_proj"].astype(x.dtype)  # [B, L, 2gn]
+    dt = x @ params["dt_proj"].astype(x.dtype)  # [B, L, nh]
+    return z, xs, bc, dt
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    xh: [B, L, H, P]; dt: [B, L, H]; A: [H] (negative);
+    B, C: [B, L, G, N] (G=1 here, broadcast over heads).
+    Returns y: [B, L, H, P] and the final state [B, H, P, N].
+    """
+    b, l, h, p = xh.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xh_c = xh.reshape(b, nc, chunk, h, p)
+    dt_c = dt.reshape(b, nc, chunk, h)
+    B_c = B.reshape(b, nc, chunk, -1, n)
+    C_c = C.reshape(b, nc, chunk, -1, n)
+
+    dA = dt_c * A[None, None, None, :]  # [b,nc,q,h] (negative)
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    def body(h_prev, inp):
+        xq, dtq, Bq, Cq, cumq = inp  # chunk-local slices (b, q, ...)
+        # decay from position j (exclusive) to i (inclusive): exp(cum_i - cum_j)
+        seg = cumq[:, :, None, :] - cumq[:, None, :, :]  # [b, i, j, h]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        # intra-chunk (quadratic, MXU): scores[b,i,j,h] = C_i·B_j · decay · dt_j
+        cb = jnp.einsum("bign,bjgn->bijg", Cq, Bq)  # G broadcast → g=1
+        scores = cb * decay.astype(cb.dtype) * dtq[:, None, :, :].astype(cb.dtype)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores.astype(xq.dtype), xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum(
+            "bign,bhpn->bihp", Cq, h_prev.astype(Cq.dtype)
+        ) * jnp.exp(cumq)[..., None].astype(xq.dtype)
+        # state update: h_new = h·exp(cum_Q) + Σ_j exp(cum_Q-cum_j)·dt_j·B_j⊗x_j
+        total = cumq[:, -1:, :]  # [b,1,h]
+        w = jnp.exp(total - cumq) * dtq  # [b,q,h]
+        h_new = h_prev * jnp.exp(total[:, 0, :, None, None]).astype(h_prev.dtype) + jnp.einsum(
+            "bqh,bqgn,bqhp->bhpn", w.astype(xq.dtype), Bq, xq
+        ).astype(h_prev.dtype)
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    inputs = (
+        jnp.moveaxis(xh_c, 1, 0),
+        jnp.moveaxis(dt_c, 1, 0),
+        jnp.moveaxis(B_c, 1, 0),
+        jnp.moveaxis(C_c, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(body, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, p)
+    return y, h_final
+
+
+def ssm_forward(
+    params: Params, x: jnp.ndarray, cfg, *, return_state: bool = False
+) -> Any:
+    """Full-sequence SSD block (train / prefill). x: [B, L, D]."""
+    s, d, di, nh, gn = _dims(cfg)
+    b, l, _ = x.shape
+    z, xs_raw, bc, dtr = _project(params, x, cfg)
+    xs_act, tail_x = _causal_conv(params["conv_x_w"], params["conv_x_b"], xs_raw)
+    bc_act, tail_bc = _causal_conv(params["conv_bc_w"], params["conv_bc_b"], bc)
+    xs = xs_act.reshape(b, l, nh, s.head_dim)
+    Bv = bc_act[..., :gn].reshape(b, l, s.n_groups, s.d_state)
+    Cv = bc_act[..., gn:].reshape(b, l, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # [b,l,h]
+    A = -jnp.exp(params["A_log"])  # [h]
+
+    chunk = min(s.chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, h_final = _ssd_chunked(xs, dt, A, Bv, Cv, chunk)
+    y = y[:, :l]
+
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs[:, :l]
+    y = y.reshape(b, l, di)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(params["norm"], y, "rmsnorm")
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        state = SSMState(h=h_final, conv_x=tail_x, conv_bc=tail_bc)
+        return out, state
+    return out
+
+
+def init_ssm_state(batch: int, cfg, dtype) -> SSMState:
+    s, d, di, nh, gn = _dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        conv_x=jnp.zeros((batch, s.d_conv - 1, di), dtype),
+        conv_bc=jnp.zeros((batch, s.d_conv - 1, 2 * gn), dtype),
+    )
+
+
+def ssm_decode_step(
+    params: Params, x: jnp.ndarray, state: SSMState, cfg
+) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token recurrence. x: [B, 1, D]."""
+    s, d, di, nh, gn = _dims(cfg)
+    b = x.shape[0]
+    z, xs_raw, bc, dtr = _project(params, x, cfg)
+    xs_act, tail_x = _causal_conv(params["conv_x_w"], params["conv_x_b"], xs_raw, state.conv_x)
+    bc_act, tail_bc = _causal_conv(params["conv_bc_w"], params["conv_bc_b"], bc, state.conv_bc)
+    xs = xs_act[:, 0].reshape(b, nh, s.head_dim)
+    Bv = bc_act[:, 0, :gn].reshape(b, s.n_groups, s.d_state)
+    Cv = bc_act[:, 0, gn:].reshape(b, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + params["dt_bias"])  # [b,h]
+    A = -jnp.exp(params["A_log"])
+
+    dA = jnp.exp(dtv * A)  # [b,h]
+    Bb = Bv[:, 0]  # [b,n] (G=1 broadcast)
+    Cb = Cv[:, 0]
+    h_new = state.h * dA[..., None, None] + (
+        dtv[..., None, None]
+        * xs.astype(jnp.float32)[..., None]
+        * Bb.astype(jnp.float32)[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cb.astype(jnp.float32)).astype(x.dtype)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(b, 1, di)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(params["norm"], y, "rmsnorm")
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, SSMState(h=h_new, conv_x=tail_x, conv_bc=tail_bc)

@@ -1,0 +1,532 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+One functional stack covers the ten assigned architectures:
+
+  dense   — [norm→attn→res, norm→mlp→res] × L
+  moe     — mlp sublayer replaced by token-choice MoE on configured layers
+  hybrid  — per-period layer pattern of attention ('a') / SSD ('m') slots
+  ssm     — all-'m', no MLP sublayer (mamba2 block layout)
+  vlm     — precomputed patch embeddings spliced ahead of text embeddings
+  audio   — encoder stack (bidirectional) + decoder stack with cross-attn
+
+**Scan-over-layers**: parameters for each slot of the repeating period are
+stacked over periods and the stack is applied with ``lax.scan`` — the HLO
+contains one period body regardless of depth (96-layer nemotron compiles
+as fast as 2-layer smoke), and remat wraps the scan body (``cfg.remat``).
+
+Decode threads per-slot caches (KV rings / SSD states) through the same
+scan, so serving reuses the exact layer code that training lowers.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.ctx import constrain_batch
+
+from .attention import (
+    KVCache,
+    attention_forward,
+    cache_slots,
+    cross_attention_forward,
+    decode_attention,
+    encode_cross_kv,
+    init_attention,
+    init_kv_cache,
+    prefill_into_cache,
+)
+from .layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    embed_tokens,
+    init_mlp,
+    init_norm,
+    logits_from_hidden,
+    sinusoidal_positions,
+)
+from .moe import apply_moe, init_moe
+from .ssm import (
+    SSMState,
+    init_ssm,
+    init_ssm_state,
+    ssm_decode_step,
+    ssm_forward,
+)
+
+# ---------------------------------------------------------------------------
+# slot structure
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SlotSpec:
+    kind: str  # 'a' | 'm'
+    moe: bool
+    cross: bool = False  # decoder cross-attention (audio)
+
+
+def build_slots(cfg: ArchConfig) -> Tuple[List[SlotSpec], int]:
+    """Per-period slot specs + number of periods."""
+    kinds = cfg.layer_kinds()
+    period = len(cfg.layer_pattern) if cfg.layer_pattern else 1
+    if cfg.moe is not None:
+        period = _lcm(period, cfg.moe.every_k_layers)
+    period = min(period, cfg.n_layers)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    slots = [
+        SlotSpec(kinds[i], cfg.is_moe_layer(i), cross=cfg.enc_dec) for i in range(period)
+    ]
+    # sanity: the pattern must actually repeat with this period
+    for i in range(cfg.n_layers):
+        assert kinds[i] == slots[i % period].kind
+        assert cfg.is_moe_layer(i) == slots[i % period].moe
+    return slots, cfg.n_layers // period
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_slot(key, slot: SlotSpec, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model)}
+    if slot.kind == "a":
+        p["attn"] = init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = init_ssm(ks[1], cfg)
+    if slot.cross:
+        p["norm_x"] = init_norm(cfg.norm, cfg.d_model)
+        p["cross"] = init_attention(ks[2], cfg)
+    if slot.moe:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model)
+        p["moe"] = init_moe(ks[3], cfg)
+    elif cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model)
+        p["mlp"] = init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.glu)
+    return p
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> Params:
+    slots, n_periods = build_slots(cfg)
+    keys = jax.random.split(rng, 8)
+    params: Params = {
+        "embedding": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size)
+    if cfg.positional == "learned":
+        params["pos_embed"] = 0.02 * jax.random.normal(
+            keys[2], (max(cfg.max_seq, 4096), cfg.d_model), jnp.float32
+        )
+
+    def init_stack(base_key, slot):
+        per_period = jax.random.split(base_key, n_periods)
+        return jax.vmap(lambda k: _init_slot(k, slot, cfg))(per_period)
+
+    slot_keys = jax.random.split(keys[3], len(slots))
+    params["slots"] = [init_stack(slot_keys[i], s) for i, s in enumerate(slots)]
+
+    if cfg.enc_dec:
+        enc_slot = SlotSpec("a", False, cross=False)
+        enc_keys = jax.random.split(keys[4], cfg.n_enc_layers)
+        params["enc"] = {
+            "slots": [jax.vmap(lambda k: _init_slot(k, enc_slot, cfg))(enc_keys)],
+            "final_norm": init_norm(cfg.norm, cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _slot_forward(slot_params, x, slot: SlotSpec, cfg: ArchConfig, *,
+                  causal: bool, enc_kv=None):
+    aux = jnp.float32(0.0)
+    h = apply_norm(slot_params["norm1"], x, cfg.norm)
+    if slot.kind == "a":
+        x = x + attention_forward(slot_params["attn"], h, cfg, causal=causal)
+    else:
+        x = x + ssm_forward(slot_params["ssm"], h, cfg)
+    if slot.cross and enc_kv is not None:
+        hx = apply_norm(slot_params["norm_x"], x, cfg.norm)
+        x = x + cross_attention_forward(slot_params["cross"], hx, enc_kv, cfg)
+    if slot.moe:
+        h2 = apply_norm(slot_params["norm2"], x, cfg.norm)
+        y, a = apply_moe(slot_params["moe"], h2, cfg)
+        x = x + y
+        aux = aux + a
+    elif cfg.d_ff > 0:
+        h2 = apply_norm(slot_params["norm2"], x, cfg.norm)
+        x = x + apply_mlp(slot_params["mlp"], h2, cfg.activation, cfg.glu)
+    return x, aux
+
+
+def _run_stack(slot_stacks, x, slots: List[SlotSpec], cfg: ArchConfig, *,
+               causal: bool, enc_kv=None):
+    """Scan the stacked periods; remat the period body per cfg.remat."""
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        x = constrain_batch(x)
+        for i, slot in enumerate(slots):
+            x, a = _slot_forward(period_params[i], x, slot, cfg,
+                                 causal=causal, enc_kv=enc_kv)
+            aux = aux + a
+        return (constrain_batch(x), aux), None
+
+    if cfg.remat in ("block", "full"):
+        # 'block': full recompute inside each period (saves only the
+        # residual-stream carry — 0.1 GB vs 1 GB/layer on granite-20b; the
+        # dots-saveable policy was measured at 52 GB/device, EXPERIMENTS
+        # §Perf). 'block_dots' trades memory back for recompute FLOPs.
+        period_body = jax.checkpoint(period_body)
+    elif cfg.remat == "block_dots":
+        period_body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+
+    n_periods = jax.tree.leaves(slot_stacks[0])[0].shape[0]
+    if cfg.remat == "nested" and n_periods >= 4:
+        # Two-level (√L) remat: residual saves drop from n_periods×carry to
+        # (n_groups + group)×carry — what fits nemotron-340b's 96 layers.
+        group = _best_group(n_periods)
+        stacks_g = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // group, group, *a.shape[1:]),
+            tuple(slot_stacks),
+        )
+        inner_body = jax.checkpoint(period_body)
+
+        @jax.checkpoint
+        def group_body(carry, group_params):
+            out, _ = jax.lax.scan(inner_body, carry, group_params)
+            return out, None
+
+        (x, aux), _ = jax.lax.scan(group_body, (x, jnp.float32(0.0)), stacks_g)
+        return x, aux
+
+    (x, aux), _ = jax.lax.scan(period_body, (x, jnp.float32(0.0)), tuple(slot_stacks))
+    return x, aux
+
+
+def _best_group(n: int) -> int:
+    """Divisor of n closest to √n (nested-remat group size)."""
+    import math
+
+    target = math.isqrt(n)
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and abs(d - target) < abs(best - target):
+            best = d
+    return best
+
+
+def _compute_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """Family-dependent input embedding. Returns (x, label_offset)."""
+    dtype = _compute_dtype(cfg)
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embedding"], tokens, dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        patches = batch["patch_embeds"].astype(dtype)  # [B, P, D] (stub frontend)
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.positional == "learned":
+        s = x.shape[1]
+        x = x + params["pos_embed"][:s].astype(dtype)[None]
+    elif cfg.positional == "sinusoidal":
+        s = x.shape[1]
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    return x
+
+
+def _encode(params, batch, cfg: ArchConfig):
+    """Audio encoder: frames [B, T, D] (conv frontend stubbed) → enc_out."""
+    dtype = _compute_dtype(cfg)
+    frames = batch["frames"].astype(dtype)
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dtype)[None]
+    enc_slots = [SlotSpec("a", False, cross=False)]
+    x, _ = _run_stack(params["enc"]["slots"], x, enc_slots, cfg, causal=False)
+    return apply_norm(params["enc"]["final_norm"], x, cfg.norm)
+
+
+def forward(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """Full-sequence forward → (logits [B, S, V], aux_loss)."""
+    slots, _ = build_slots(cfg)
+    enc_kv = None
+    if cfg.enc_dec:
+        enc_out = _encode(params, batch, cfg)
+        # cross K/V shared across decoder layers would be wrong — each layer
+        # has its own projections; project inside the slot via stacked params.
+        # We instead pass enc_out and let each slot project. To keep the
+        # scan body uniform we precompute per-slot K/V lazily inside
+        # _slot_forward via encode_cross_kv — but that needs per-layer
+        # weights, which ARE per-slot. So pass enc_out through closure:
+        enc_kv = enc_out  # sentinel: projected per-slot below
+    x = _embed_inputs(params, batch, cfg)
+
+    if cfg.enc_dec:
+        x, aux = _run_stack_encdec(params["slots"], x, enc_kv, slots, cfg)
+    else:
+        x, aux = _run_stack(params["slots"], x, slots, cfg, causal=True)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_from_hidden(
+        x, params["embedding"], params.get("head"), softcap=cfg.logit_softcap
+    )
+    return logits, aux
+
+
+def _run_stack_encdec(slot_stacks, x, enc_out, slots, cfg):
+    def period_body(carry, period_params):
+        x, aux = carry
+        x = constrain_batch(x)
+        for i, slot in enumerate(slots):
+            sp = period_params[i]
+            kv = encode_cross_kv(sp["cross"], enc_out, cfg)
+            x, a = _slot_forward(sp, x, slot, cfg, causal=True, enc_kv=kv)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat in ("block", "full"):
+        period_body = jax.checkpoint(period_body)
+    (x, aux), _ = jax.lax.scan(period_body, (x, jnp.float32(0.0)), tuple(slot_stacks))
+    return x, aux
+
+
+def forward_hidden(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """Forward up to the final norm (no unembedding)."""
+    slots, _ = build_slots(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    if cfg.enc_dec:
+        enc_out = _encode(params, batch, cfg)
+        x, aux = _run_stack_encdec(params["slots"], x, enc_out, slots, cfg)
+    else:
+        x, aux = _run_stack(params["slots"], x, slots, cfg, causal=True)
+    return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """Next-token CE (+ MoE aux). For VLM, loss is on text positions only.
+
+    Large-vocab models never materialize [B, S, V] logits — the loss runs
+    through the chunked CE (layers.chunked_cross_entropy)."""
+    from .layers import CE_CHUNK_ELEMENTS, chunked_cross_entropy
+
+    x, aux = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        n_patch = batch["patch_embeds"].shape[1]
+        x = x[:, n_patch:]
+    b, s, _ = x.shape
+    w = params["embedding"].T if "head" not in params else params["head"]
+    if b * s * cfg.vocab_size > CE_CHUNK_ELEMENTS:
+        from repro.parallel.ctx import degather_weight
+
+        if cfg.vocab_size % 16 == 0:  # keep vocab sharding, drop zero3 data
+            w = degather_weight(w, model_dim=-1)
+        loss, n = chunked_cross_entropy(x, w, labels, softcap=cfg.logit_softcap)
+    else:
+        logits = logits_from_hidden(
+            x, params["embedding"], params.get("head"), softcap=cfg.logit_softcap
+        )
+        loss, n = cross_entropy(logits, labels)
+    return loss + aux, {"ce": loss, "aux": aux, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+class LayerCaches(NamedTuple):
+    """Per-slot stacked caches (over periods)."""
+
+    kv: List[Any]  # KVCache or None per slot
+    ssm: List[Any]  # SSMState or None per slot
+    cross_kv: Optional[List[Any]] = None  # audio: per-slot stacked (k, v)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> LayerCaches:
+    dtype = dtype or _compute_dtype(cfg)
+    slots, n_periods = build_slots(cfg)
+    slots_n = cache_slots(cfg, max_seq)
+
+    def stack(make):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n_periods)])
+
+    kv, ssm = [], []
+    for slot in slots:
+        if slot.kind == "a":
+            kv.append(stack(lambda: init_kv_cache(batch, slots_n, cfg, dtype)))
+            ssm.append(None)
+        else:
+            kv.append(None)
+            ssm.append(stack(lambda: init_ssm_state(batch, cfg, dtype)))
+    return LayerCaches(kv=kv, ssm=ssm, cross_kv=None)
+
+
+def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            *, max_seq: Optional[int] = None):
+    """Process the prompt, returning last-position logits + decode caches.
+
+    Runs slot-by-slot (python loop over periods via scan with cache
+    outputs); the prompt length S is the shape's seq_len.
+    """
+    slots, n_periods = build_slots(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[0], x.shape[1]
+    max_seq = max_seq or (s + 1024)
+    slots_n = cache_slots(cfg, max_seq)
+    enc_out = _encode(params, batch, cfg) if cfg.enc_dec else None
+
+    kv_out: List[Any] = []
+    ssm_out: List[Any] = []
+    cross_out: List[Any] = []
+
+    def period_body(x_aux, period_params):
+        x, aux = x_aux
+        x = constrain_batch(x)
+        new_caches = []
+        for i, slot in enumerate(slots):
+            sp = period_params[i]
+            h = apply_norm(sp["norm1"], x, cfg.norm)
+            if slot.kind == "a":
+                y, cache = prefill_into_cache(sp["attn"], h, cfg, slots_n)
+                x = x + y
+                new_caches.append(cache)
+            else:
+                y, state = ssm_forward(sp["ssm"], h, cfg, return_state=True)
+                x = x + y
+                new_caches.append(state)
+            if slot.cross and enc_out is not None:
+                kvx = encode_cross_kv(sp["cross"], enc_out, cfg)
+                hx = apply_norm(sp["norm_x"], x, cfg.norm)
+                x = x + cross_attention_forward(sp["cross"], hx, kvx, cfg)
+                new_caches.append(kvx)
+            if slot.moe:
+                h2 = apply_norm(sp["norm2"], x, cfg.norm)
+                y, a = apply_moe(sp["moe"], h2, cfg)
+                x, aux = x + y, aux + a
+            elif cfg.d_ff > 0:
+                h2 = apply_norm(sp["norm2"], x, cfg.norm)
+                x = x + apply_mlp(sp["mlp"], h2, cfg.activation, cfg.glu)
+        return (x, aux), tuple(new_caches)
+
+    (x, _aux), caches_stacked = jax.lax.scan(
+        period_body, (x, jnp.float32(0.0)), tuple(params["slots"])
+    )
+
+    # unpack per-slot cache stacks
+    ci = 0
+    cross_kv: List[Any] = []
+    for slot in slots:
+        if slot.kind == "a":
+            kv_out.append(caches_stacked[ci])
+            ssm_out.append(None)
+        else:
+            kv_out.append(None)
+            ssm_out.append(caches_stacked[ci])
+        ci += 1
+        if slot.cross:
+            cross_kv.append(caches_stacked[ci])
+            ci += 1
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    last = x[:, -1:]
+    logits = logits_from_hidden(
+        last, params["embedding"], params.get("head"), softcap=cfg.logit_softcap
+    )
+    return logits[:, 0], LayerCaches(kv_out, ssm_out, cross_kv or None)
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, caches: LayerCaches,
+                step_pos: jnp.ndarray, cfg: ArchConfig):
+    """One decode step. tokens: [B, 1] int32; step_pos: [B] absolute pos.
+    Returns (logits [B, V], new caches)."""
+    slots, n_periods = build_slots(cfg)
+    dtype = _compute_dtype(cfg)
+    x = embed_tokens(params["embedding"], tokens, dtype)
+    if cfg.positional == "learned":
+        x = x + params["pos_embed"].astype(dtype)[step_pos][:, None]
+
+    # xs for the scan: per-slot stacked params + caches
+    xs: List[Any] = []
+    for i, slot in enumerate(slots):
+        entry: Dict[str, Any] = {"params": params["slots"][i]}
+        if slot.kind == "a":
+            entry["cache"] = caches.kv[i]
+        else:
+            entry["cache"] = caches.ssm[i]
+        if slot.cross and caches.cross_kv is not None:
+            entry["cross_kv"] = caches.cross_kv[_cross_index(slots, i)]
+        xs.append(entry)
+
+    def period_body(x, slot_inputs):
+        new_caches = []
+        for i, slot in enumerate(slots):
+            sp = slot_inputs[i]["params"]
+            cache = slot_inputs[i]["cache"]
+            h = apply_norm(sp["norm1"], x, cfg.norm)
+            if slot.kind == "a":
+                y, cache = decode_attention(sp["attn"], h, cache, step_pos, cfg)
+            else:
+                y, cache = ssm_decode_step(sp["ssm"], h, cache, cfg)
+            x = x + y
+            new_caches.append(cache)
+            if slot.cross and "cross_kv" in slot_inputs[i]:
+                hx = apply_norm(sp["norm_x"], x, cfg.norm)
+                x = x + cross_attention_forward(
+                    sp["cross"], hx, slot_inputs[i]["cross_kv"], cfg
+                )
+            if slot.moe:
+                h2 = apply_norm(sp["norm2"], x, cfg.norm)
+                y, _a = apply_moe(sp["moe"], h2, cfg)
+                x = x + y
+            elif cfg.d_ff > 0:
+                h2 = apply_norm(sp["norm2"], x, cfg.norm)
+                x = x + apply_mlp(sp["mlp"], h2, cfg.activation, cfg.glu)
+        return x, tuple(new_caches)
+
+    x, caches_stacked = jax.lax.scan(period_body, x, tuple(xs))
+
+    kv_out, ssm_out = [], []
+    for i, slot in enumerate(slots):
+        if slot.kind == "a":
+            kv_out.append(caches_stacked[i])
+            ssm_out.append(None)
+        else:
+            kv_out.append(None)
+            ssm_out.append(caches_stacked[i])
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_from_hidden(
+        x[:, 0:1], params["embedding"], params.get("head"), softcap=cfg.logit_softcap
+    )
+    return logits[:, 0], LayerCaches(kv_out, ssm_out, caches.cross_kv)
+
+
+def _cross_index(slots: List[SlotSpec], slot_idx: int) -> int:
+    """Index into the cross_kv list for a given slot."""
+    return sum(1 for s in slots[:slot_idx] if s.cross)

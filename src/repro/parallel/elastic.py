@@ -1,0 +1,106 @@
+"""Elastic scaling: re-mesh on membership change + checkpoint resharding.
+
+When hosts die (or arrive), a 1000-node job must resume on the surviving
+set without a full restart from slot 0. The flow GridSelect implements:
+
+  1. the straggler/failure monitor (train/straggler.py) or the launcher
+     declares a membership change,
+  2. :func:`plan_mesh` picks the largest valid mesh shape for the
+     surviving chip count (data axis shrinks in powers of two; the model
+     axis is preserved — TP degree is an architectural choice),
+  3. the checkpoint manager restores the latest step into the new mesh:
+     checkpoints store *logically complete* arrays (chunked, replicated
+     across storage endpoints via the broker), so restoring into any mesh
+     is just applying the new ShardingPolicy's specs — no reshard pass,
+  4. the data pipeline recomputes its shard→host assignment from the new
+     mesh (deterministic in (step, host) — no coordinator).
+
+``plan_mesh`` + ``revalidate_batch`` are pure functions, unit-tested;
+the end-to-end save→shrink→restore path is tests/test_elastic.py.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["MeshPlan", "plan_mesh", "revalidate_batch", "host_shard_assignment"]
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    chips: int
+    dropped_chips: int
+    per_device_batch_scale: float  # how much per-device batch grows
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (n.bit_length() - 1) if n > 0 else 0
+
+
+def plan_mesh(
+    alive_chips: int,
+    *,
+    model_parallel: int,
+    prefer_pods: bool = True,
+    pod_size: int = 256,
+) -> MeshPlan:
+    """Largest usable mesh for ``alive_chips``: keep TP = ``model_parallel``,
+    shrink the data axis to the largest power of two that fits, and use a
+    pod axis when at least two full pods survive."""
+    if alive_chips < model_parallel:
+        raise ValueError(
+            f"cannot keep model_parallel={model_parallel} with {alive_chips} chips"
+        )
+    usable_data = _pow2_floor(alive_chips // model_parallel)
+    chips = usable_data * model_parallel
+    if prefer_pods and chips >= 2 * pod_size and chips % pod_size == 0:
+        pods = _pow2_floor(chips // pod_size)
+        chips = pods * pod_size
+        data = chips // (pods * model_parallel)
+        shape: Tuple[int, ...] = (pods, data, model_parallel)
+        axes: Tuple[str, ...] = ("pod", "data", "model")
+    else:
+        shape = (usable_data, model_parallel)
+        axes = ("data", "model")
+        chips = usable_data * model_parallel
+    return MeshPlan(
+        shape=shape,
+        axes=axes,
+        chips=chips,
+        dropped_chips=alive_chips - chips,
+        per_device_batch_scale=1.0,
+    )
+
+
+def revalidate_batch(global_batch: int, plan: MeshPlan) -> Tuple[int, int]:
+    """Keep the global batch (optimization semantics!) and recompute the
+    per-data-shard microbatch. Returns (global_batch, per_shard)."""
+    data = 1
+    for s, a in zip(plan.shape, plan.axes):
+        if a in ("pod", "data"):
+            data *= s
+    if global_batch % data != 0:
+        # shrink to the largest multiple that divides — logged by caller
+        global_batch = (global_batch // data) * data
+        if global_batch == 0:
+            raise ValueError("global batch smaller than data-parallel degree")
+    return global_batch, global_batch // data
+
+
+def host_shard_assignment(
+    n_shards: int, n_hosts: int, host_index: int, *, epoch: int = 0
+) -> List[int]:
+    """Deterministic shard→host assignment (round-robin rotated by epoch).
+    Every host computes the same answer with no coordinator — the same
+    decentralization argument the paper makes for broker placement."""
+    if not 0 <= host_index < n_hosts:
+        raise ValueError((host_index, n_hosts))
+    return [
+        s
+        for s in range(n_shards)
+        if (s + epoch) % n_hosts == host_index
+    ]

@@ -1,0 +1,227 @@
+"""Simulated storage endpoints and the DataGrid facade.
+
+A :class:`StorageEndpoint` is the stand-in for one GridFTP server + volume:
+it *stores real bytes* (checkpoint integrity tests read them back), tracks
+capacity, exposes a Storage GRIS whose dynamic attributes are provider
+callbacks over live endpoint state (≙ shell-backends), and owns the
+TransferMonitor that instruments every transfer through it (≙ the paper's
+tuned FTP server).
+
+:class:`DataGrid` assembles endpoints + topology + GIIS + replica catalog
+into one simulated grid and hands out per-client brokers — the unit every
+example, test and the training data pipeline builds on.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.bandwidth import TransferMonitor
+from repro.core.broker import DataBroker
+from repro.core.catalog import PhysicalFile, ReplicaCatalog
+from repro.core.giis import GIIS
+from repro.core.gris import Clock, StorageGRIS
+
+from .simnet import NetModel, ZoneTopology
+
+__all__ = ["StorageEndpoint", "DataGrid", "checksum"]
+
+
+def checksum(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()[:16]
+
+
+class StorageEndpoint:
+    """One storage resource: volume + GRIS + transfer instrumentation."""
+
+    def __init__(
+        self,
+        url: str,
+        *,
+        capacity: int = 1 << 40,  # 1 TiB
+        disk_rate: float = 800e6,  # B/s
+        drd_time: float = 4e-3,  # seek times (Figure 2)
+        dwr_time: float = 5e-3,
+        mount_point: str = "/data",
+        zone: str = "default",
+        policy: Optional[str] = None,  # admin `requirements` ClassAd source
+        clock: Optional[Clock] = None,
+        gris_ttl: float = 5.0,
+    ):
+        self.url = url
+        self.capacity = int(capacity)
+        self.disk_rate = float(disk_rate)
+        self.zone = zone
+        self.clock = clock or Clock()
+        self._store: Dict[str, bytes] = {}
+        self._used = 0
+        self.alive = True
+        self.degradation = 1.0  # multiplicative bandwidth penalty (1 = none)
+        self.flaky_rate = 0.0  # probability a transfer fails outright
+        self._flaky_counter = 0
+        self.active_transfers = 0
+
+        static = {
+            "hostname": url,
+            "mountPoint": mount_point,
+            "diskTransferRate": self.disk_rate,
+            "drdTime": drd_time,
+            "dwrTime": dwr_time,
+            "zone": zone,
+        }
+        if policy:
+            static["requirements"] = policy
+        self.gris = StorageGRIS(f"gss={url}, o=grid", static, clock=self.clock)
+        # Dynamic attributes — provider callbacks over live state, the
+        # in-process analogue of the paper's shell-backend scripts.
+        self.gris.register_dynamic("totalSpace", lambda: float(self.capacity), ttl=gris_ttl)
+        self.gris.register_dynamic("availableSpace", lambda: float(self.available), ttl=gris_ttl)
+        self.gris.register_dynamic("loadFactor", lambda: float(self.active_transfers), ttl=gris_ttl)
+        self.monitor = TransferMonitor(self.gris)
+
+    # -- volume ------------------------------------------------------------
+    @property
+    def available(self) -> int:
+        return self.capacity - self._used
+
+    @property
+    def used(self) -> int:
+        return self._used
+
+    def put(self, path: str, data: bytes) -> None:
+        old = len(self._store.get(path, b""))
+        new_used = self._used - old + len(data)
+        if new_used > self.capacity:
+            raise IOError(f"{self.url}: volume full ({new_used} > {self.capacity})")
+        self._store[path] = bytes(data)
+        self._used = new_used
+        self.gris.invalidate("availableSpace")
+
+    def get(self, path: str) -> bytes:
+        if path not in self._store:
+            raise FileNotFoundError(f"{self.url}:{path}")
+        return self._store[path]
+
+    def delete(self, path: str) -> None:
+        data = self._store.pop(path, None)
+        if data is not None:
+            self._used -= len(data)
+            self.gris.invalidate("availableSpace")
+
+    def has(self, path: str) -> bool:
+        return path in self._store
+
+    def paths(self) -> List[str]:
+        return sorted(self._store)
+
+    # -- fault state (driven by faults.FaultInjector) -----------------------
+    def kill(self) -> None:
+        self.alive = False
+
+    def heal(self) -> None:
+        self.alive = True
+        self.degradation = 1.0
+        self.flaky_rate = 0.0
+
+
+class DataGrid:
+    """The whole simulated grid: endpoints, topology, catalog, index.
+
+    One instance per test/benchmark/training-job; per-client brokers come
+    from :meth:`broker_for` and share nothing mutable except the published
+    world state (catalog + GRIS), exactly as §5.1.1 prescribes.
+    """
+
+    def __init__(self, *, seed: int = 0, clock: Optional[Clock] = None):
+        self.clock = clock or Clock()
+        self.topology = ZoneTopology()
+        self.net = NetModel(self.topology, seed=seed)
+        self.catalog = ReplicaCatalog()
+        self.giis = GIIS("o=grid", clock=self.clock)
+        self.endpoints: Dict[str, StorageEndpoint] = {}
+        self.seed = seed
+
+    # -- construction ------------------------------------------------------
+    def add_endpoint(
+        self,
+        url: str,
+        *,
+        zone: str = "default",
+        region: Optional[str] = None,
+        **kwargs,
+    ) -> StorageEndpoint:
+        ep = StorageEndpoint(url, zone=zone, clock=self.clock, **kwargs)
+        self.endpoints[url] = ep
+        self.topology.assign(url, zone, region)
+        self.giis.register(url, ep.gris)
+        return ep
+
+    def add_client(self, url: str, zone: str = "default", region: Optional[str] = None) -> None:
+        self.topology.assign(url, zone, region)
+
+    def gris_for(self, endpoint_url: str) -> Optional[StorageGRIS]:
+        ep = self.endpoints.get(endpoint_url)
+        if ep is None or not ep.alive:
+            return None  # a dead endpoint's GRIS is unreachable
+        return ep.gris
+
+    def broker_for(self, client_url: str, **kwargs) -> DataBroker:
+        return DataBroker(
+            client_url, self.catalog, self.gris_for, clock=self.clock, **kwargs
+        )
+
+    def transfer_service(self):
+        from .transfer import SimulatedTransferService
+
+        return SimulatedTransferService(self)
+
+    # -- replication helpers ------------------------------------------------
+    def store_replica(self, lfn: str, endpoint_url: str, data: bytes, path: Optional[str] = None) -> PhysicalFile:
+        """Write bytes to an endpoint and register the replica."""
+        ep = self.endpoints[endpoint_url]
+        path = path or f"/data/{lfn}"
+        ep.put(path, data)
+        pfn = PhysicalFile(endpoint_url, path, len(data), checksum(data))
+        self.catalog.register_replica(lfn, pfn)
+        return pfn
+
+    def replicate(self, lfn: str, data: bytes, endpoint_urls: Sequence[str]) -> List[PhysicalFile]:
+        return [self.store_replica(lfn, ep, data) for ep in endpoint_urls]
+
+    def drop_endpoint(self, url: str) -> None:
+        """Declare an endpoint dead: GRIS unreachable, transfers fail.
+        Catalog entries are left in place — brokers must failover, and the
+        repair daemon (checkpoint/placement) re-replicates."""
+        self.endpoints[url].kill()
+
+    def alive_endpoints(self) -> List[str]:
+        return sorted(u for u, e in self.endpoints.items() if e.alive)
+
+
+def build_demo_grid(
+    n_endpoints: int = 8,
+    n_zones: int = 4,
+    *,
+    seed: int = 0,
+    capacity: int = 1 << 34,
+    clock: Optional[Clock] = None,
+    policy_every: int = 3,
+    policy: str = "other.reqdSpace <= 10G",
+) -> DataGrid:
+    """A small heterogeneous grid used by tests/examples: endpoints spread
+    over zones, every ``policy_every``-th endpoint publishing a usage
+    policy like the paper's hugo.mcs.anl.gov ad."""
+    grid = DataGrid(seed=seed, clock=clock)
+    for i in range(n_endpoints):
+        zone = f"zone{i % n_zones}"
+        grid.add_endpoint(
+            f"gsiftp://ep{i:03d}",
+            zone=zone,
+            region="region0" if (i % n_zones) < max(n_zones // 2, 1) else "region1",
+            capacity=capacity,
+            disk_rate=200e6 * (1 + (i % 5)),
+            policy=policy if (policy_every and i % policy_every == 0) else None,
+        )
+    return grid

@@ -1,0 +1,122 @@
+"""Fault injection for the simulated grid.
+
+Large-scale runnability demands that node death, degradation and flapping
+be *routine*, not exceptional. The injector drives endpoint fault state
+deterministically (seeded schedule) so fault-tolerance tests are exact:
+the broker must failover, the checkpoint restorer must find a surviving
+replica, the repair daemon must restore the replication factor.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .endpoint import DataGrid
+
+__all__ = ["FaultEvent", "FaultInjector"]
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    at: float  # clock time
+    kind: str  # 'kill' | 'heal' | 'degrade' | 'flaky'
+    endpoint: str
+    factor: float = 1.0  # degrade multiplier or flaky probability
+
+
+class FaultInjector:
+    """Applies scheduled or immediate faults to grid endpoints."""
+
+    def __init__(self, grid: DataGrid):
+        self.grid = grid
+        self.schedule: List[FaultEvent] = []
+        self.applied: List[FaultEvent] = []
+
+    # -- immediate faults ----------------------------------------------------
+    def kill(self, endpoint: str) -> None:
+        self.grid.endpoints[endpoint].kill()
+        self.applied.append(FaultEvent(self.grid.clock.now(), "kill", endpoint))
+
+    def heal(self, endpoint: str) -> None:
+        self.grid.endpoints[endpoint].heal()
+        self.applied.append(FaultEvent(self.grid.clock.now(), "heal", endpoint))
+
+    def degrade(self, endpoint: str, factor: float) -> None:
+        """Multiply the endpoint's effective bandwidth by ``factor`` (<1).
+        This is the straggler scenario: alive but slow."""
+        self.grid.endpoints[endpoint].degradation = factor
+        self.applied.append(
+            FaultEvent(self.grid.clock.now(), "degrade", endpoint, factor)
+        )
+
+    def flaky(self, endpoint: str, probability: float) -> None:
+        self.grid.endpoints[endpoint].flaky_rate = probability
+        self.applied.append(
+            FaultEvent(self.grid.clock.now(), "flaky", endpoint, probability)
+        )
+
+    # -- scheduled faults ---------------------------------------------------
+    def schedule_event(self, event: FaultEvent) -> None:
+        self.schedule.append(event)
+        self.schedule.sort(key=lambda e: e.at)
+
+    def tick(self) -> List[FaultEvent]:
+        """Apply every scheduled event whose time has come."""
+        now = self.grid.clock.now()
+        due = [e for e in self.schedule if e.at <= now]
+        self.schedule = [e for e in self.schedule if e.at > now]
+        for e in due:
+            if e.kind == "kill":
+                self.kill(e.endpoint)
+            elif e.kind == "heal":
+                self.heal(e.endpoint)
+            elif e.kind == "degrade":
+                self.degrade(e.endpoint, e.factor)
+            elif e.kind == "flaky":
+                self.flaky(e.endpoint, e.factor)
+        return due
+
+    # -- chaos schedule ---------------------------------------------------------
+    def chaos(
+        self,
+        *,
+        horizon: float,
+        mtbf: float,
+        mttr: float,
+        seed: int = 0,
+        kinds: Sequence[str] = ("kill", "degrade"),
+    ) -> int:
+        """Generate a deterministic kill/heal schedule over ``horizon``
+        seconds with the given mean-time-between-failures per endpoint."""
+        n = 0
+        for url in sorted(self.grid.endpoints):
+            t = 0.0
+            k = 0
+            while True:
+                u = _unit(seed, url, "gap", str(k))
+                t += -mtbf * _ln(u)
+                if t >= horizon:
+                    break
+                kind = kinds[int(_unit(seed, url, "kind", str(k)) * len(kinds)) % len(kinds)]
+                factor = 0.05 + 0.2 * _unit(seed, url, "factor", str(k))
+                self.schedule_event(FaultEvent(t, kind, url, factor))
+                heal_at = t + max(mttr * (-_ln(_unit(seed, url, "heal", str(k)))), 1.0)
+                if heal_at < horizon:
+                    self.schedule_event(FaultEvent(heal_at, "heal", url))
+                t = heal_at
+                k += 1
+                n += 1
+        return n
+
+
+def _unit(seed: int, *keys: str) -> float:
+    h = hashlib.sha256(("%d|" % seed + "|".join(keys)).encode()).digest()
+    return max(int.from_bytes(h[:8], "big") / 2**64, 1e-12)
+
+
+def _ln(x: float) -> float:
+    import math
+
+    return math.log(x)

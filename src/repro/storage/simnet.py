@@ -1,0 +1,153 @@
+"""Deterministic network/topology model for the simulated data grid.
+
+The paper's grid spans sites with very different end-to-end paths; the
+whole point of per-source bandwidth history (§3.2) is that *the same
+server looks different from different clients*. This model produces that
+structure deterministically:
+
+  * every node (storage endpoint or client host) lives in a **zone**
+    (≙ site / pod / region),
+  * a base bandwidth matrix assigns intra-zone / inter-zone link rates,
+  * each (src, dst) pair gets a stable multiplicative fingerprint drawn
+    from a seeded hash (some paths are just bad),
+  * a diurnal load wave + lognormal noise modulate each observation, so
+    history is informative but not constant (predictors have work to do),
+  * endpoints have a load factor that grows with concurrent transfers.
+
+Everything is a pure function of (seed, names, time) — two brokers
+simulating the same grid see the same world, which the decentralized-
+consistency tests rely on.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Tuple
+
+__all__ = ["ZoneTopology", "NetModel"]
+
+
+def _stable_unit(seed: int, *keys: str) -> float:
+    """Deterministic uniform [0,1) from a seed and string keys."""
+    h = hashlib.sha256(("%d|" % seed + "|".join(keys)).encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2**64
+
+
+@dataclass
+class ZoneTopology:
+    """Zone assignment plus the inter-zone base bandwidth matrix (B/s)."""
+
+    zones: Dict[str, str] = field(default_factory=dict)  # node url -> zone
+    intra_zone_bw: float = 2.0e9  # same zone: pod-local network
+    inter_zone_bw: float = 200.0e6  # cross zone: WAN-ish
+    cross_region_bw: float = 25.0e6  # zones in different regions
+    zone_region: Dict[str, str] = field(default_factory=dict)  # zone -> region
+
+    def assign(self, url: str, zone: str, region: Optional[str] = None) -> None:
+        self.zones[url] = zone
+        if region is not None:
+            self.zone_region[zone] = region
+
+    def zone_of(self, url: str) -> str:
+        return self.zones.get(url, "default")
+
+    def base_bandwidth(self, src: str, dst: str) -> float:
+        zs, zd = self.zone_of(src), self.zone_of(dst)
+        if zs == zd:
+            return self.intra_zone_bw
+        rs = self.zone_region.get(zs, zs)
+        rd = self.zone_region.get(zd, zd)
+        if rs == rd:
+            return self.inter_zone_bw
+        return self.cross_region_bw
+
+
+class NetModel:
+    """Effective bandwidth as a deterministic function of (pair, time, load)."""
+
+    def __init__(
+        self,
+        topology: ZoneTopology,
+        *,
+        seed: int = 0,
+        diurnal_amplitude: float = 0.35,
+        diurnal_period: float = 86400.0,
+        noise_sigma: float = 0.20,
+        pair_spread: float = 0.5,
+    ):
+        self.topo = topology
+        self.seed = seed
+        self.diurnal_amplitude = diurnal_amplitude
+        self.diurnal_period = diurnal_period
+        self.noise_sigma = noise_sigma
+        self.pair_spread = pair_spread
+        self._obs_counter: Dict[Tuple[str, str], int] = {}
+
+    # -- stable per-pair fingerprint ------------------------------------------
+    def pair_factor(self, src: str, dst: str) -> float:
+        """Stable multiplier in [1-spread, 1+spread*0.5]: some paths are
+        simply worse, and history is the only way to learn it."""
+        u = _stable_unit(self.seed, "pair", src, dst)
+        return 1.0 - self.pair_spread * u + 0.25 * self.pair_spread * (1 - u)
+
+    def diurnal(self, src: str, t: float) -> float:
+        phase = 2 * math.pi * _stable_unit(self.seed, "phase", src)
+        return 1.0 - self.diurnal_amplitude * 0.5 * (
+            1.0 + math.sin(2 * math.pi * t / self.diurnal_period + phase)
+        )
+
+    def noise(self, src: str, dst: str, k: int) -> float:
+        """Lognormal-ish multiplicative noise, deterministic in draw index."""
+        u = _stable_unit(self.seed, "noise", src, dst, str(k))
+        # Box-Muller-lite: map uniform → approx normal via inverse-ish sum
+        u2 = _stable_unit(self.seed, "noise2", src, dst, str(k))
+        z = math.sqrt(-2.0 * math.log(max(u, 1e-12))) * math.cos(2 * math.pi * u2)
+        return math.exp(self.noise_sigma * z - 0.5 * self.noise_sigma**2)
+
+    # -- the headline function ---------------------------------------------------
+    def effective_bandwidth(
+        self,
+        src: str,
+        dst: str,
+        t: float,
+        *,
+        load_factor: float = 0.0,
+        disk_rate: Optional[float] = None,
+        advance: bool = True,
+    ) -> float:
+        """End-to-end B/s for one transfer starting at time ``t``.
+
+        min(network path, disk) × diurnal × pair fingerprint × noise,
+        divided by (1 + load). ``advance`` increments the per-pair noise
+        draw index (each transfer sees fresh noise, deterministically).
+        """
+        base = self.topo.base_bandwidth(src, dst)
+        if disk_rate is not None:
+            base = min(base, disk_rate)
+        k = self._obs_counter.get((src, dst), 0)
+        if advance:
+            self._obs_counter[(src, dst)] = k + 1
+        bw = (
+            base
+            * self.pair_factor(src, dst)
+            * self.diurnal(src, t)
+            * self.noise(src, dst, k)
+            / (1.0 + max(load_factor, 0.0))
+        )
+        return max(bw, 1.0)
+
+    def expected_bandwidth(self, src: str, dst: str, t: float, **kw) -> float:
+        """Noise-free expectation — the oracle the quality benchmarks use."""
+        base = self.topo.base_bandwidth(src, dst)
+        disk_rate = kw.get("disk_rate")
+        if disk_rate is not None:
+            base = min(base, disk_rate)
+        return max(
+            base
+            * self.pair_factor(src, dst)
+            * self.diurnal(src, t)
+            / (1.0 + max(kw.get("load_factor", 0.0), 0.0)),
+            1.0,
+        )

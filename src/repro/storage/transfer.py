@@ -1,0 +1,158 @@
+"""Simulated GridFTP: the transfer engine behind the Access Phase.
+
+"Once a suitable replica has been identified, the file is accessed using a
+high-speed file transfer protocol, for example the GridFTP tools" (§5.1.2).
+
+The engine moves *real bytes* between endpoints and clients while charging
+simulated wall-time against the shared deterministic clock. Every transfer
+is instrumented on the server side (the endpoint's TransferMonitor → GRIS,
+§3.2) — which is precisely the feedback loop the broker's history-based
+rank expressions read. Transfers are chunked so the broker can watch
+in-flight bandwidth for straggler mitigation, and parallel streams model
+GridFTP's stream parallelism (diminishing returns past the path's
+capacity).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass
+from typing import Any, Iterator, List, Optional, Tuple
+
+from repro.core.catalog import PhysicalFile
+
+from .endpoint import DataGrid, StorageEndpoint
+
+__all__ = ["TransferFailure", "SimulatedTransferService"]
+
+
+class TransferFailure(IOError):
+    """Endpoint dead / refused / mid-transfer fault."""
+
+
+def _stable_unit(*keys: str) -> float:
+    h = hashlib.sha256("|".join(keys).encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2**64
+
+
+@dataclass
+class TransferConfig:
+    chunk_bytes: int = 256 << 10  # straggler-monitoring granularity
+    latency_s: float = 0.030  # per-transfer setup (TCP+auth handshake)
+    n_streams: int = 4  # GridFTP parallel streams
+    stream_efficiency: float = 0.85  # per-extra-stream scaling
+
+
+class SimulatedTransferService:
+    """Implements the broker's :class:`~repro.core.broker.TransferService`
+    protocol against a :class:`DataGrid`."""
+
+    def __init__(self, grid: DataGrid, config: Optional[TransferConfig] = None):
+        self.grid = grid
+        self.config = config or TransferConfig()
+        self.transfer_count = 0
+        self.bytes_moved = 0
+
+    # -- internal -----------------------------------------------------------
+    def _endpoint(self, url: str) -> StorageEndpoint:
+        ep = self.grid.endpoints.get(url)
+        if ep is None:
+            raise TransferFailure(f"unknown endpoint {url}")
+        if not ep.alive:
+            raise TransferFailure(f"endpoint {url} is down")
+        return ep
+
+    def _maybe_flake(self, ep: StorageEndpoint) -> None:
+        if ep.flaky_rate > 0:
+            ep._flaky_counter += 1
+            if _stable_unit(ep.url, "flake", str(ep._flaky_counter)) < ep.flaky_rate:
+                raise TransferFailure(f"endpoint {ep.url} dropped the connection")
+
+    def _stream_utilization(self) -> float:
+        """Path utilization with n parallel streams: a single stream only
+        fills ~40% of a long fat pipe; extra streams saturate harmonically
+        (GridFTP's motivation for stream parallelism)."""
+        n = max(self.config.n_streams, 1)
+        su = 0.4  # single-stream utilization
+        return n * su / (1.0 + (n - 1) * su)
+
+    def _bandwidth(self, ep: StorageEndpoint, client_url: str, t: float) -> float:
+        bw = self.grid.net.effective_bandwidth(
+            ep.url,
+            client_url,
+            t,
+            load_factor=ep.active_transfers,
+            disk_rate=ep.disk_rate,
+        )
+        return bw * ep.degradation * self._stream_utilization()
+
+    # -- reads ----------------------------------------------------------------
+    def read(self, replica: PhysicalFile, client_url: str) -> Tuple[bytes, int, float]:
+        """Whole-file read. Returns (payload, nbytes, seconds)."""
+        chunks: List[bytes] = []
+        nbytes = 0
+        seconds = 0.0
+        for payload, cbytes, csecs in self.read_chunks(replica, client_url):
+            chunks.append(payload)
+            nbytes += cbytes
+            seconds += csecs
+        return b"".join(chunks), nbytes, seconds
+
+    def read_chunks(
+        self, replica: PhysicalFile, client_url: str
+    ) -> Iterator[Tuple[bytes, int, float]]:
+        """Chunked read; yields (chunk, nbytes, seconds) and charges the
+        clock as it goes. Instrumented server-side on completion."""
+        ep = self._endpoint(replica.endpoint)
+        self._maybe_flake(ep)
+        data = ep.get(replica.path)
+        t0 = self.grid.clock.now()
+        ep.active_transfers += 1
+        total = len(data)
+        sent = 0
+        elapsed = self.config.latency_s
+        self.grid.clock.advance(self.config.latency_s)
+        try:
+            while sent < total or total == 0:
+                chunk = data[sent : sent + self.config.chunk_bytes]
+                bw = self._bandwidth(ep, client_url, self.grid.clock.now())
+                csecs = len(chunk) / bw if bw > 0 else math.inf
+                self.grid.clock.advance(csecs)
+                elapsed += csecs
+                sent += len(chunk)
+                yield chunk, len(chunk), csecs
+                if total == 0:
+                    break
+                # endpoint may die mid-transfer (fault injection)
+                if not ep.alive:
+                    raise TransferFailure(f"endpoint {ep.url} died mid-transfer")
+                self._maybe_flake(ep)
+        finally:
+            ep.active_transfers -= 1
+        # server-side instrumentation (§3.2): read = replica -> client
+        ep.monitor.observe_transfer("read", client_url, total, max(elapsed, 1e-9), t0)
+        self.transfer_count += 1
+        self.bytes_moved += total
+
+    # -- writes ----------------------------------------------------------------
+    def write(
+        self, endpoint_url: str, path: str, data: bytes, client_url: str
+    ) -> Tuple[int, float]:
+        """Client → endpoint write (checkpoint placement). Returns
+        (nbytes, seconds); registers nothing — callers own the catalog."""
+        ep = self._endpoint(endpoint_url)
+        self._maybe_flake(ep)
+        t0 = self.grid.clock.now()
+        ep.active_transfers += 1
+        try:
+            bw = self._bandwidth(ep, client_url, t0)
+            seconds = self.config.latency_s + (len(data) / bw if bw > 0 else math.inf)
+            self.grid.clock.advance(seconds)
+            ep.put(path, data)
+        finally:
+            ep.active_transfers -= 1
+        ep.monitor.observe_transfer("write", client_url, len(data), max(seconds, 1e-9), t0)
+        self.transfer_count += 1
+        self.bytes_moved += len(data)
+        return len(data), seconds

@@ -1,0 +1,105 @@
+"""Straggler detection: per-host step-time statistics → mitigation actions.
+
+Two straggler classes exist at scale and GridSelect handles both:
+
+  * **data stragglers** — a host's shard fetches slow down because its
+    chosen replica degraded. Handled *inside* the broker (mid-transfer
+    re-selection, core/broker.py); nothing to do here.
+  * **compute stragglers** — a host's step time drifts (thermal, ECC,
+    noisy neighbour). Detected here from the step-time stream each host
+    reports: robust z-score against the fleet median/MAD, EWMA-smoothed
+    per host. Persistent offenders produce actions: first
+    ``rebalance`` (shed input work — shrink that host's prefetch), then
+    ``exclude`` (trigger an elastic re-mesh without it, parallel/elastic).
+
+Deterministic and side-effect free: feed observations, read actions.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+__all__ = ["StragglerAction", "StragglerMonitor"]
+
+
+@dataclass(frozen=True)
+class StragglerAction:
+    host: str
+    kind: str  # 'rebalance' | 'exclude'
+    z_score: float
+    step: int
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        *,
+        ewma_alpha: float = 0.3,
+        z_rebalance: float = 3.0,
+        z_exclude: float = 6.0,
+        patience: int = 3,
+        window: int = 64,
+        min_excess: float = 0.15,  # ignore hosts < 15% over the median
+    ):
+        self.alpha = ewma_alpha
+        self.z_rebalance = z_rebalance
+        self.z_exclude = z_exclude
+        self.patience = patience
+        self.window = window
+        self.min_excess = min_excess
+        self._ewma: Dict[str, float] = {}
+        self._strikes: Dict[str, int] = defaultdict(int)
+        self._history: Deque[Tuple[int, Dict[str, float]]] = deque(maxlen=window)
+        self.excluded: List[str] = []
+
+    def observe_step(self, step: int, host_times: Dict[str, float]) -> List[StragglerAction]:
+        """Feed one step's per-host times; returns triggered actions."""
+        for h, t in host_times.items():
+            prev = self._ewma.get(h)
+            self._ewma[h] = t if prev is None else self.alpha * t + (1 - self.alpha) * prev
+        self._history.append((step, dict(host_times)))
+
+        smoothed = {h: v for h, v in self._ewma.items() if h not in self.excluded}
+        if len(smoothed) < 3:
+            return []
+        med = _median(list(smoothed.values()))
+        mad = _median([abs(v - med) for v in smoothed.values()]) or 1e-9
+
+        actions: List[StragglerAction] = []
+        for h, v in sorted(smoothed.items()):
+            z = 0.6745 * (v - med) / mad  # normal-consistent robust z
+            if z >= self.z_rebalance and (v - med) / max(med, 1e-9) >= self.min_excess:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+                continue
+            if self._strikes[h] >= self.patience:
+                if z >= self.z_exclude:
+                    actions.append(StragglerAction(h, "exclude", z, step))
+                    self.excluded.append(h)
+                    self._strikes[h] = 0
+                else:
+                    actions.append(StragglerAction(h, "rebalance", z, step))
+        return actions
+
+    def fleet_summary(self) -> Dict[str, float]:
+        vals = [v for h, v in self._ewma.items() if h not in self.excluded]
+        if not vals:
+            return {}
+        med = _median(vals)
+        return {
+            "median_step_s": med,
+            "max_step_s": max(vals),
+            "straggler_overhead": max(vals) / med - 1.0 if med > 0 else 0.0,
+            "excluded_hosts": float(len(self.excluded)),
+        }
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    if n == 0:
+        return 0.0
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])

@@ -1,0 +1,172 @@
+"""The decentralized broker: Search/Match/Access phases, failover,
+straggler mitigation, vectorized-match parity, write placement."""
+
+import numpy as np
+import pytest
+
+from repro.core.broker import (
+    BrokerError,
+    NoReplicaError,
+    default_read_request,
+    default_write_request,
+)
+from repro.core.classads import parse_classad
+from repro.storage.endpoint import build_demo_grid
+from repro.storage.faults import FaultInjector
+
+
+@pytest.fixture
+def grid():
+    g = build_demo_grid(8, 4, seed=7)
+    g.add_client("client://host0", zone="zone1")
+    g.add_client("client://host1", zone="zone2")
+    data = b"x" * (4 << 20)
+    g.replicate("shard-000", data, ["gsiftp://ep000", "gsiftp://ep003", "gsiftp://ep005"])
+    g.replicate("shard-001", b"y" * (1 << 20), ["gsiftp://ep001", "gsiftp://ep004"])
+    return g
+
+
+class TestSearchPhase:
+    def test_views_carry_gris_state(self, grid):
+        b = grid.broker_for("client://host0")
+        views = b.search("shard-000")
+        assert len(views) == 3
+        for v in views:
+            assert "availableSpace" in v.entry
+            assert "diskTransferRate" in v.entry
+
+    def test_missing_lfn(self, grid):
+        with pytest.raises(Exception):
+            grid.broker_for("client://host0").search("no-such-file")
+
+    def test_dead_endpoint_excluded(self, grid):
+        grid.drop_endpoint("gsiftp://ep000")
+        views = grid.broker_for("client://host0").search("shard-000")
+        assert {v.pfn.endpoint for v in views} == {"gsiftp://ep003", "gsiftp://ep005"}
+
+
+class TestMatchPhase:
+    def test_policy_gating(self, grid):
+        # ep000/ep003 publish `other.reqdSpace <= 10G` (policy_every=3)
+        b = grid.broker_for("client://host0")
+        req = default_read_request("client://host0")
+        req["reqdSpace"] = 20 * 1024**3  # violates the site policy
+        ranked = b.match(req, b.search("shard-000"))
+        assert {r.pfn.endpoint for r in ranked} == {"gsiftp://ep005"}
+
+    def test_cold_rank_uses_static_attrs(self, grid):
+        b = grid.broker_for("client://host0")
+        ranked = b.select("shard-000")
+        # disk rates: ep003=800MB/s > ep000=200MB/s = ep005(1000?) per build
+        assert ranked[0].rank >= ranked[-1].rank
+
+    def test_history_changes_ranking(self, grid):
+        b = grid.broker_for("client://host0")
+        xfer = grid.transfer_service()
+        cold = [r.pfn.endpoint for r in b.select("shard-000")]
+        for _ in range(8):
+            b.fetch("shard-000", xfer)
+        warm = b.select("shard-000")
+        # warm ranks come from observed bandwidth (EWMA per-source), which
+        # is bounded by simulated path bandwidth << static disk rate
+        assert all(r.rank < 1e9 for r in warm)
+
+    def test_vectorized_match_parity(self, grid):
+        b_i = grid.broker_for("client://host0")
+        b_v = grid.broker_for("client://host0", use_vectorized=True)
+        xfer = grid.transfer_service()
+        for _ in range(4):
+            b_i.fetch("shard-000", xfer)
+        r_i = [r.pfn.endpoint for r in b_i.select("shard-000")]
+        r_v = [r.pfn.endpoint for r in b_v.select("shard-000")]
+        assert r_i == r_v
+        assert b_v.stats["vectorized_matches"] > 0
+
+
+class TestAccessPhase:
+    def test_fetch_returns_payload(self, grid):
+        b = grid.broker_for("client://host0")
+        out = b.fetch("shard-000", grid.transfer_service())
+        assert out.nbytes == 4 << 20
+        assert out.payload == b"x" * (4 << 20)
+
+    def test_failover_on_death(self, grid):
+        b = grid.broker_for("client://host0")
+        xfer = grid.transfer_service()
+        best = b.select("shard-000")[0].pfn.endpoint
+        grid.drop_endpoint(best)
+        out = b.fetch("shard-000", xfer)
+        assert out.replica.endpoint != best
+
+    def test_flaky_endpoint_failover(self, grid):
+        b = grid.broker_for("client://host0")
+        xfer = grid.transfer_service()
+        inj = FaultInjector(grid)
+        best = b.select("shard-000")[0].pfn.endpoint
+        inj.flaky(best, 1.0)  # always drops
+        out = b.fetch("shard-000", xfer)
+        assert out.replica.endpoint != best
+        assert b.stats["failovers"] >= 1
+
+    def test_all_dead_raises(self, grid):
+        b = grid.broker_for("client://host0")
+        for ep in ("gsiftp://ep000", "gsiftp://ep003", "gsiftp://ep005"):
+            grid.drop_endpoint(ep)
+        with pytest.raises(Exception):
+            b.fetch("shard-000", grid.transfer_service())
+
+    def test_straggler_mid_transfer_switch(self, grid):
+        b = grid.broker_for("client://host0")
+        xfer = grid.transfer_service()
+        for _ in range(6):  # build history so rank = predicted bandwidth
+            b.fetch("shard-000", xfer)
+        best = b.select("shard-000")[0].pfn.endpoint
+        FaultInjector(grid).degrade(best, 0.02)  # alive but 50× slower
+        out = b.fetch("shard-000", xfer)
+        assert out.replica.endpoint != best
+        assert b.stats["straggler_switches"] >= 1
+        assert out.payload == b"x" * (4 << 20)
+
+
+class TestDecentralization:
+    def test_brokers_share_no_state_but_agree(self, grid):
+        """§5.1.1: every client selects independently; same published
+        state ⇒ same decision for same-zone clients."""
+        grid.add_client("client://host0b", zone="zone1")
+        b1 = grid.broker_for("client://host0")
+        b2 = grid.broker_for("client://host0b")
+        r1 = [r.pfn.endpoint for r in b1.select("shard-000")]
+        r2 = [r.pfn.endpoint for r in b2.select("shard-000")]
+        assert r1 == r2
+        assert b1.local_monitor is not b2.local_monitor
+
+    def test_different_zones_can_differ(self, grid):
+        """Per-source history makes selection client-relative (§3.2)."""
+        b0 = grid.broker_for("client://host0")
+        b1 = grid.broker_for("client://host1")
+        xfer = grid.transfer_service()
+        for _ in range(6):
+            b0.fetch("shard-000", xfer)
+            b1.fetch("shard-000", xfer)
+        # both selections are valid orderings of the same replica set
+        s0 = {r.pfn.endpoint for r in b0.select("shard-000")}
+        s1 = {r.pfn.endpoint for r in b1.select("shard-000")}
+        assert s0 == s1
+
+
+class TestPlacement:
+    def test_write_placement_respects_space(self, grid):
+        b = grid.broker_for("client://host0")
+        placements = b.select_placements(1 << 20, grid.alive_endpoints(), k=3)
+        assert len(placements) == 3
+        # a request larger than every volume matches nothing
+        with pytest.raises(Exception):
+            b.select_placements(1 << 60, grid.alive_endpoints(), k=1)
+
+    def test_placement_obeys_policy(self, grid):
+        b = grid.broker_for("client://host0")
+        big = 11 * 1024**3  # over the 10G limit of policy endpoints
+        placements = b.select_placements(big, grid.alive_endpoints(), k=8)
+        eps = {p.pfn.endpoint for p in placements}
+        assert "gsiftp://ep000" not in eps  # policy endpoint refuses
+        assert "gsiftp://ep003" not in eps

@@ -1,0 +1,230 @@
+"""ClassAd language semantics: units, tri-state logic, scoping, builtins."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classads import (
+    ClassAd,
+    Error,
+    Undefined,
+    evaluate,
+    parse,
+    parse_classad,
+    ClassAdSyntaxError,
+)
+
+
+def ev(src, ad=None, other=None, env=None):
+    return evaluate(parse(src), ad, other, env)
+
+
+class TestLiterals:
+    def test_numbers(self):
+        assert ev("42") == 42
+        assert ev("3.5") == 3.5
+        assert ev("1e3") == 1000.0
+
+    def test_unit_suffixes_match_paper_ads(self):
+        # the paper's §4 storage ad uses 50G / 75K
+        assert ev("50G") == 50 * 1024**3
+        assert ev("75K") == 75 * 1024
+        assert ev("2M") == 2 * 1024**2
+        assert ev("1.5K") == 1536.0
+
+    def test_strings_and_bools(self):
+        assert ev('"hello"') == "hello"
+        assert ev("true") is True
+        assert ev("FALSE") is False
+        assert ev("undefined") is Undefined
+        assert ev("error") is Error
+
+    def test_syntax_errors(self):
+        for bad in ("1 +", "(1", "a .", "{1,", "foo(1,"):
+            with pytest.raises(ClassAdSyntaxError):
+                parse(bad)
+
+
+class TestArithmetic:
+    def test_precedence(self):
+        assert ev("7 % 2 + 2 * 3") == 7
+        assert ev("2 + 3 * 4 == 14") is True
+        assert ev("(2 + 3) * 4") == 20
+
+    def test_integer_division_truncates_toward_zero(self):
+        assert ev("7 / 2") == 3
+        assert ev("-7 / 2") == -3
+        assert ev("7 / 2.0") == 3.5
+
+    def test_division_by_zero_is_error(self):
+        assert ev("5 / 0") is Error
+        assert ev("5 % 0") is Error
+
+    def test_string_concat_via_plus(self):
+        assert ev('"a" + "b"') == "ab"
+
+    def test_type_mismatch_is_error(self):
+        assert ev('1 + "a"') is Error
+        assert ev('"a" < 1') is Error
+
+
+class TestTriState:
+    """Condor's three-valued logic with absorption."""
+
+    def test_and_absorption(self):
+        assert ev("false && undefined") is False
+        assert ev("undefined && false") is False
+        assert ev("true && undefined") is Undefined
+        assert ev("undefined && undefined") is Undefined
+        assert ev("false && error") is False
+        assert ev("true && error") is Error
+
+    def test_or_absorption(self):
+        assert ev("true || undefined") is True
+        assert ev("undefined || true") is True
+        assert ev("false || undefined") is Undefined
+        assert ev("false || error") is Error
+
+    def test_not(self):
+        assert ev("!undefined") is Undefined
+        assert ev("!error") is Error
+        assert ev("!true") is False
+
+    def test_comparisons_propagate(self):
+        assert ev("undefined < 5") is Undefined
+        assert ev("error == error") is Error  # strict ops propagate Error
+        assert ev("undefined + 1") is Undefined
+
+    def test_identity_comparison_is_total(self):
+        assert ev("undefined =?= undefined") is True
+        assert ev("error =?= error") is True
+        assert ev("undefined =?= 5") is False
+        assert ev("undefined =!= 5") is True
+        assert ev('"a" =?= "A"') is False  # case-sensitive
+        assert ev('"a" == "A"') is True  # == is case-insensitive
+
+    def test_ternary(self):
+        assert ev("(1 < 2) ? 10 : 20") == 10
+        assert ev("undefined ? 10 : 20") is Undefined
+        assert ev("error ? 10 : 20") is Error
+
+
+class TestScoping:
+    def test_other_and_my(self):
+        a = parse_classad("x = 1; y = other.x + 10")
+        b = parse_classad("x = 5")
+        assert a.eval_attr("y", b) == 15
+        a2 = parse_classad("x = 1; y = my.x + 10")
+        assert a2.eval_attr("y", b) == 11
+
+    def test_unqualified_lookup_order_self_then_other(self):
+        a = parse_classad("y = x + 1")
+        b = parse_classad("x = 7")
+        assert a.eval_attr("y", b) == 8  # falls through to other
+        a2 = parse_classad("x = 2; y = x + 1")
+        assert a2.eval_attr("y", b) == 3  # self wins
+
+    def test_missing_is_undefined(self):
+        a = parse_classad("y = other.nosuch")
+        assert a.eval_attr("y", ClassAd()) is Undefined
+
+    def test_cycle_guard(self):
+        a = parse_classad("x = y; y = x")
+        assert a.eval_attr("x") is Error
+
+    def test_case_insensitive_attrs(self):
+        a = parse_classad("FooBar = 3")
+        assert a.eval_attr("foobar") == 3
+        assert "FOOBAR" in a
+
+
+class TestRecordsAndLists:
+    def test_nested_record(self):
+        assert ev("[a=1; b=a+1].b") == 2
+
+    def test_list_index_and_member(self):
+        assert ev("{10,20,30}[1]") == 20
+        assert ev("{10,20,30}[5]") is Error
+        assert ev("member(2, {1,2,3})") is True
+        assert ev('member("B", {"a","b"})') is True  # case-insensitive
+
+
+class TestBuiltins:
+    def test_numeric(self):
+        assert ev("floor(3.7)") == 3
+        assert ev("ceiling(3.2)") == 4
+        assert ev("round(2.5)") == 3
+        assert ev("round(-2.5)") == -3
+        assert ev("abs(-4)") == 4
+        assert ev("pow(2, 10)") == 1024
+        assert ev("sqrt(-1)") is Error
+        assert ev("min(3, 1, 2)") == 1
+        assert ev("max({3, 1, 2})") == 3
+        assert ev("avg({2, 4})") == 3
+
+    def test_strings(self):
+        assert ev('strcat("a", 1, "b")') == "a1b"
+        assert ev('toUpper("ab")') == "AB"
+        assert ev('substr("hello", 1, 3)') == "ell"
+        assert ev('regexp("^h.*o$", "hello")') is True
+
+    def test_introspection(self):
+        assert ev("isUndefined(nosuch)") is True
+        assert ev("isError(1/0)") is True
+        assert ev("ifThenElse(1 < 2, 5, 6)") == 5
+
+    def test_time_uses_injected_clock(self):
+        assert ev("time()", env={"now": 1234.0}) == 1234
+        assert ev("time()") is Error  # no clock injected
+
+    def test_strict_builtins_propagate(self):
+        assert ev("floor(undefined)") is Undefined
+        assert ev("pow(error, 2)") is Error
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+nums = st.one_of(
+    st.integers(min_value=-(2**31), max_value=2**31),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+)
+
+
+@given(nums, nums)
+@settings(max_examples=200, deadline=None)
+def test_prop_arithmetic_matches_python(a, b):
+    ad = ClassAd({"a": a, "b": b})
+    got = ad.copy()
+    got.set_expr("s", "a + b")
+    assert got.eval_attr("s") == pytest.approx(a + b, rel=1e-6, abs=1e-6)
+
+
+@given(nums, nums)
+@settings(max_examples=200, deadline=None)
+def test_prop_comparison_total_order(a, b):
+    ad = ClassAd({"a": a, "b": b})
+    lt = evaluate(parse("a < b"), ad)
+    ge = evaluate(parse("a >= b"), ad)
+    assert lt != ge  # exactly one holds for defined numerics
+
+
+@given(st.booleans() | st.none(), st.booleans() | st.none())
+@settings(max_examples=100, deadline=None)
+def test_prop_kleene_and_or_duality(x, y):
+    """De Morgan holds in the tri-state logic (None ⇒ undefined)."""
+    ad = ClassAd({"x": x, "y": y})
+    lhs = evaluate(parse("!(x && y)"), ad)
+    rhs = evaluate(parse("(!x) || (!y)"), ad)
+    assert lhs is rhs or lhs == rhs
+
+
+@given(st.integers(-1000, 1000))
+@settings(max_examples=50, deadline=None)
+def test_prop_parse_repr_roundtrip(n):
+    expr = parse(f"(a + {n}) * 2 - abs(b)")
+    again = parse(repr(expr))
+    ad = ClassAd({"a": 7, "b": -3})
+    assert evaluate(expr, ad) == evaluate(again, ad)

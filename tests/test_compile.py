@@ -1,0 +1,118 @@
+"""ClassAd→columnar compiler: equivalence with the interpreter, fallback
+behaviour, kernel-plan extraction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.broker import ReplicaView
+from repro.core.catalog import PhysicalFile
+from repro.core.classads import ClassAd, parse, parse_classad
+from repro.core.compile import (
+    CompileError,
+    build_columns,
+    compile_program,
+    extract_conjunctive_terms,
+    extract_linear_rank,
+    vectorized_match,
+)
+from repro.core.ldif import entry_to_classad
+from repro.core.matchmaker import Matchmaker
+
+
+def make_views(rng, s, *, policy_frac=0.3):
+    views = []
+    for i in range(s):
+        entry = {
+            "endpoint": f"ep{i:04d}",
+            "availableSpace": float(rng.uniform(0, 20 * 1024**3)),
+            "MaxRDBandwidth": float(rng.uniform(0, 200 * 1024)),
+            "loadFactor": float(rng.uniform(0, 8)),
+        }
+        if rng.random() < 0.15:
+            del entry["MaxRDBandwidth"]  # Undefined column entries
+        if rng.random() < policy_frac:
+            entry["requirements"] = "other.reqdSpace <= 10G"
+        ad = entry_to_classad(entry)
+        views.append(ReplicaView(PhysicalFile(entry["endpoint"], "/p", 1), entry, ad))
+    return views
+
+
+REQS = [
+    "other.availableSpace > 5G && other.MaxRDBandwidth >= 50K",
+    "other.loadFactor <= 4 || other.availableSpace > 10G",
+    "!(other.loadFactor > 6)",
+    "ifThenElse(isUndefined(other.MaxRDBandwidth), false, other.MaxRDBandwidth > 10K)",
+    "true",
+]
+RANKS = [
+    "other.availableSpace",
+    "other.availableSpace / 1M + 2 * other.MaxRDBandwidth",
+    "min(other.loadFactor, 3) * -1.0",
+    "ifThenElse(other.loadFactor < 2, 100.0, 1.0)",
+]
+
+
+class TestEquivalence:
+    @pytest.mark.parametrize("req", REQS)
+    @pytest.mark.parametrize("rank", RANKS)
+    def test_matrix(self, req, rank):
+        rng = np.random.default_rng(hash((req, rank)) % 2**32)
+        views = make_views(rng, 40)
+        request = ClassAd({"reqdSpace": 5 * 1024**3})
+        request.set_expr("requirements", req)
+        request.set_expr("rank", rank)
+        interp = Matchmaker().match(request, [v.ad for v in views])
+        vec = vectorized_match(request, views)
+        assert vec is not None
+        assert [m.ad.eval_attr("endpoint") for m in interp] == [
+            r.view.entry["endpoint"] for r in vec
+        ]
+
+    @given(st.integers(0, 100000), st.integers(1, 60))
+    @settings(max_examples=30, deadline=None)
+    def test_prop_random_grids(self, seed, s):
+        rng = np.random.default_rng(seed)
+        views = make_views(rng, s)
+        request = ClassAd({"reqdSpace": int(rng.uniform(0, 20 * 1024**3))})
+        request.set_expr("requirements", REQS[seed % len(REQS)])
+        request.set_expr("rank", RANKS[seed % len(RANKS)])
+        interp = Matchmaker().match(request, [v.ad for v in views])
+        vec = vectorized_match(request, views)
+        assert [m.ad.eval_attr("endpoint") for m in interp] == [
+            r.view.entry["endpoint"] for r in vec
+        ]
+
+
+class TestFallback:
+    def test_string_ops_fall_back(self):
+        request = ClassAd()
+        request.set_expr("requirements", 'other.hostname == "a"')
+        views = make_views(np.random.default_rng(0), 5)
+        assert vectorized_match(request, views) is None
+
+    def test_unknown_builtin_falls_back(self):
+        request = ClassAd()
+        request.set_expr("requirements", "regexp(\"x\", other.name)")
+        views = make_views(np.random.default_rng(0), 5)
+        assert vectorized_match(request, views) is None
+
+
+class TestKernelExtraction:
+    def test_conjunctive_terms(self):
+        req = parse_classad("reqdSpace = 4K; requirements = other.a > 5 && my.reqdSpace <= other.b && 3 < other.c")
+        terms = extract_conjunctive_terms(req["requirements"], req)
+        assert {(t.attr, t.op) for t in terms} == {("a", ">"), ("b", ">="), ("c", ">")}
+
+    def test_non_conjunctive_rejected(self):
+        req = parse_classad("requirements = other.a > 5 || other.b > 2")
+        assert extract_conjunctive_terms(req["requirements"], req) is None
+
+    def test_linear_rank(self):
+        req = parse_classad("rank = 2 * other.a + other.b / 4 - 3")
+        w = extract_linear_rank(req["rank"], req)
+        assert w["a"] == 2.0 and w["b"] == 0.25 and w[""] == -3.0
+
+    def test_nonlinear_rank_rejected(self):
+        req = parse_classad("rank = other.a * other.b")
+        assert extract_linear_rank(req["rank"], req) is None

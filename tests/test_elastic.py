@@ -1,0 +1,98 @@
+"""Elastic scaling: mesh planning + save-on-one-mesh / restore-on-another.
+
+The resharding restore runs in a subprocess with 8 forced host devices —
+the main test process must keep seeing exactly 1 device (the dry-run
+rule), so multi-device behaviour is always exercised out of process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.parallel.elastic import host_shard_assignment, plan_mesh, revalidate_batch
+
+
+class TestPlanMesh:
+    def test_keeps_model_parallel(self):
+        plan = plan_mesh(200, model_parallel=16)
+        assert plan.axes[-1] == "model"
+        assert plan.shape[-1] == 16
+        assert plan.chips == 128  # 8×16 (largest pow2 data)
+        assert plan.dropped_chips == 72
+
+    def test_multi_pod_when_enough(self):
+        plan = plan_mesh(512, model_parallel=16, pod_size=256)
+        assert plan.axes == ("pod", "data", "model")
+        assert plan.shape == (2, 16, 16)
+
+    def test_shrink_to_single_pod(self):
+        plan = plan_mesh(300, model_parallel=16, pod_size=256)
+        assert plan.chips == 256
+        assert plan.shape == (16, 16)
+
+    def test_too_few_chips(self):
+        with pytest.raises(ValueError):
+            plan_mesh(8, model_parallel=16)
+
+    def test_batch_revalidation(self):
+        plan = plan_mesh(128, model_parallel=16)
+        gb, per = revalidate_batch(256, plan)
+        assert gb == 256 and per == 32
+        gb, per = revalidate_batch(100, plan)  # not divisible by 8
+        assert gb == 96 and per == 12
+
+    def test_assignment_recomputed_after_resize(self):
+        before = [host_shard_assignment(32, 8, h) for h in range(8)]
+        after = [host_shard_assignment(32, 4, h) for h in range(4)]
+        assert sorted(sum(after, [])) == list(range(32))
+        assert sorted(sum(before, [])) == list(range(32))
+
+
+RESHARD_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.storage.endpoint import build_demo_grid
+
+grid = build_demo_grid(4, 2, seed=0, capacity=1 << 30)
+grid.add_client("client://t", zone="zone0")
+broker = grid.broker_for("client://t")
+mgr = CheckpointManager("elastic", grid, broker, replication=2, chunk_bytes=32 << 10)
+
+# save from a (4, 2) mesh
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+w = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
+state = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))}
+mgr.save(1, state)
+
+# restore into a shrunken (2, 2) mesh (node loss: 8 -> 4 devices)
+mesh_b = jax.make_mesh((2, 2), ("data", "model"))
+def spec_fn(path, shape):
+    return P("data", "model")
+restored = mgr.restore(1, jax.eval_shape(lambda: {"w": w}), mesh=mesh_b, spec_fn=spec_fn)
+ok = bool(np.array_equal(np.asarray(restored["w"]), np.asarray(w)))
+n_shards = len(restored["w"].sharding.device_set)
+print(json.dumps({"ok": ok, "devices": n_shards}))
+"""
+
+
+def test_reshard_restore_into_smaller_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", RESHARD_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["ok"] is True
+    assert result["devices"] == 4  # restored onto the shrunken mesh

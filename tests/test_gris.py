@@ -1,0 +1,163 @@
+"""Storage GRIS + GIIS: dynamic attributes, TTL, schema, drill-down."""
+
+import pytest
+
+from repro.core.giis import GIIS
+from repro.core.gris import Clock, StorageGRIS
+from repro.core.schema import (
+    SERVER_VOLUME,
+    SOURCE_TRANSFER_BANDWIDTH,
+    TRANSFER_BANDWIDTH,
+    SchemaError,
+    validate_entry,
+)
+
+
+def make_gris(clock=None):
+    clock = clock or Clock()
+    g = StorageGRIS(
+        "gss=vol0, ou=mcs, o=anl, o=grid",
+        {
+            "hostname": "hugo.mcs.anl.gov",
+            "mountPoint": "/dev/sandbox",
+            "diskTransferRate": 800e6,
+            "drdTime": 0.004,
+            "dwrTime": 0.005,
+            "requirements": "other.reqdSpace < 10G",
+        },
+        clock=clock,
+    )
+    state = {"avail": 50.0 * 1024**3, "calls": 0}
+
+    def avail():
+        state["calls"] += 1
+        return state["avail"]
+
+    g.register_dynamic("totalSpace", lambda: 100.0 * 1024**3, ttl=5)
+    g.register_dynamic("availableSpace", avail, ttl=5)
+    g.register_dynamic("loadFactor", lambda: 0.0, ttl=5)
+    return g, state, clock
+
+
+class TestSchema:
+    def test_figures_2_4_5_attribute_sets(self):
+        assert SERVER_VOLUME.must_names == [
+            "totalSpace", "availableSpace", "mountPoint",
+            "diskTransferRate", "drdTime", "dwrTime",
+        ]
+        assert "MaxRDBandwidth" in TRANSFER_BANDWIDTH.must_names
+        assert "lastRDurl" in SOURCE_TRANSFER_BANDWIDTH.must_names
+
+    def test_must_enforced(self):
+        with pytest.raises(SchemaError):
+            validate_entry({"totalSpace": 1}, SERVER_VOLUME)
+
+    def test_syntax_enforced(self):
+        entry = {
+            "totalSpace": "not-a-number", "availableSpace": 1.0,
+            "mountPoint": "/x", "diskTransferRate": 1.0,
+            "drdTime": 1.0, "dwrTime": 1.0,
+        }
+        with pytest.raises(SchemaError):
+            validate_entry(entry, SERVER_VOLUME)
+
+
+class TestGRIS:
+    def test_dynamic_ttl_caching(self):
+        """Shell-backend semantics: providers run on query, cached per TTL."""
+        g, state, clock = make_gris()
+        g.volume_entry()
+        g.volume_entry()
+        assert state["calls"] == 1  # cached within TTL
+        clock.advance(6)
+        g.volume_entry()
+        assert state["calls"] == 2  # TTL expired → provider re-ran
+
+    def test_invalidate(self):
+        g, state, clock = make_gris()
+        g.volume_entry()
+        g.invalidate("availableSpace")
+        g.volume_entry()
+        assert state["calls"] == 2
+
+    def test_search_filter_and_projection(self):
+        g, state, _ = make_gris()
+        out = g.search("(objectClass=Grid::Storage::ServerVolume)",
+                       attrs=["availableSpace"])
+        assert len(out) == 1
+        assert set(k.lower() for k in out[0]) <= {"dn", "objectclass", "availablespace"}
+
+    def test_bandwidth_children(self):
+        g, state, _ = make_gris()
+        g.publish_bandwidth_summary({
+            "MaxRDBandwidth": 5e6, "MinRDBandwidth": 1e6, "AvgRDBandwidth": 3e6,
+            "MaxWRBandwidth": 4e6, "MinWRBandwidth": 1e6, "AvgWRBandwidth": 2e6,
+        })
+        g.publish_source_bandwidth("client://a", {
+            "lastRDBandwidth": 2.5e6, "lastRDurl": "client://a",
+            "lastWRBandwidth": 0.0, "lastWRurl": "",
+        })
+        entries = g.entries()
+        ocs = [e["objectClass"] for e in entries]
+        assert "Grid::Storage::TransferBandwidth" in ocs
+        assert "Grid::Storage::SourceTransferBandwidth" in ocs
+        # per-source narrowing flattens this client's end-to-end stats
+        view = g.flattened_view(source="client://a")
+        assert view["lastRDBandwidth"] == 2.5e6
+        assert view["AvgRDBandwidth"] == 3e6
+
+    def test_schema_violation_refused(self):
+        g, state, _ = make_gris()
+        with pytest.raises(SchemaError):
+            g.publish_bandwidth_summary({"MaxRDBandwidth": 1.0})  # missing MUSTs
+
+    def test_ldif_output(self):
+        g, _, _ = make_gris()
+        text = g.to_ldif()
+        assert "dn: gss=vol0" in text
+        assert "availableSpace:" in text
+
+
+class TestGIIS:
+    def test_register_search_drilldown(self):
+        clock = Clock()
+        giis = GIIS("o=grid", clock=clock, cache_ttl=30)
+        grises = []
+        for i in range(4):
+            g, _, _ = make_gris(clock)
+            g.set_static("hostname", f"ep{i}")
+            giis.register(f"ep{i}", g)
+            grises.append(g)
+        # broad query to the index
+        out = giis.search("(objectClass=Grid::Storage::ServerVolume)")
+        assert len(out) == 4
+        # discovery → drill-down pairs
+        found = giis.discover("(hostname=ep2)")
+        assert len(found) == 1 and found[0][0] == "ep2"
+
+    def test_index_staleness_vs_gris_freshness(self):
+        """GIIS serves cached snapshots; GRIS is authoritative."""
+        clock = Clock()
+        giis = GIIS("o=grid", clock=clock, cache_ttl=30)
+        g, state, _ = make_gris(clock)
+        giis.register("ep0", g)
+        giis.search(None)  # snapshot taken
+        state["avail"] = 1.0  # world changes
+        g.invalidate("availableSpace")
+        stale = giis.search(None)[0]["availableSpace"]
+        assert stale == 50.0 * 1024**3  # index still stale
+        fresh = g.volume_entry()["availableSpace"]
+        assert fresh == 1.0  # drill-down sees truth
+        clock.advance(31)
+        refreshed = giis.search(None)[0]["availableSpace"]
+        assert refreshed == 1.0  # snapshot refreshed after TTL
+
+    def test_hierarchical(self):
+        clock = Clock()
+        root = GIIS("o=grid", clock=clock)
+        child = GIIS("o=pod0", clock=clock)
+        g, _, _ = make_gris(clock)
+        child.register("ep0", g)
+        root.register("pod0", child)
+        assert len(root.search(None)) == 1
+        assert root.discover(None)[0][0] == "ep0"

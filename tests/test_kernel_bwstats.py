@@ -1,0 +1,91 @@
+"""bwstats Pallas kernel: shape sweeps vs jnp ref vs python recursion."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import TransferMonitor
+from repro.kernels.bwstats.ops import bwstats, publish_fleet_stats
+
+
+def rand_hist(rng, n, w):
+    hist = rng.uniform(1e3, 1e9, (n, w)).astype(np.float32)
+    counts = rng.integers(0, w + 1, n).astype(np.int32)
+    return hist, counts
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n,w", [(1, 1), (3, 17), (50, 37), (256, 64), (300, 128), (1024, 200)])
+    def test_shape_sweep(self, n, w):
+        rng = np.random.default_rng(n * 1000 + w)
+        hist, counts = rand_hist(rng, n, w)
+        k = bwstats(hist, counts, use_kernel=True)
+        r = bwstats(hist, counts, use_kernel=False)
+        for name in k:
+            np.testing.assert_allclose(k[name], r[name], rtol=1e-5, atol=1e-2, err_msg=name)
+
+    @pytest.mark.parametrize("alpha", [0.1, 0.25, 0.9, 1.0])
+    def test_alpha_sweep(self, alpha):
+        rng = np.random.default_rng(int(alpha * 100))
+        hist, counts = rand_hist(rng, 32, 48)
+        k = bwstats(hist, counts, alpha=alpha, use_kernel=True)
+        r = bwstats(hist, counts, alpha=alpha, use_kernel=False)
+        np.testing.assert_allclose(k["ewma"], r["ewma"], rtol=2e-4, atol=1e-2)
+
+    def test_empty_series_zero(self):
+        hist = np.ones((4, 8), np.float32)
+        counts = np.array([0, 3, 0, 8], np.int32)
+        out = bwstats(hist, counts)
+        assert out["mean"][0] == 0 and out["mean"][2] == 0
+        assert out["mean"][1] > 0
+
+    def test_zero_rows(self):
+        out = bwstats(np.zeros((0, 8), np.float32), np.zeros((0,), np.int32))
+        assert out["mean"].shape == (0,)
+
+
+class TestVsPythonOracle:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_recursive_ewma_and_stats(self, seed):
+        rng = np.random.default_rng(seed)
+        n, w = int(rng.integers(1, 20)), int(rng.integers(1, 40))
+        hist, counts = rand_hist(rng, n, w)
+        out = bwstats(hist, counts, alpha=0.25)
+        for i in range(n):
+            c = counts[i]
+            if c == 0:
+                continue
+            xs = hist[i, :c]
+            np.testing.assert_allclose(out["min"][i], xs.min(), rtol=1e-6)
+            np.testing.assert_allclose(out["max"][i], xs.max(), rtol=1e-6)
+            np.testing.assert_allclose(out["mean"][i], xs.mean(), rtol=1e-5)
+            np.testing.assert_allclose(out["std"][i], xs.std(), rtol=1e-3, atol=1.0)
+            assert out["last"][i] == xs[-1]
+            v = xs[0]
+            for x in xs[1:]:
+                v = 0.25 * x + 0.75 * v
+            np.testing.assert_allclose(out["ewma"][i], v, rtol=5e-4)
+
+
+class TestMonitorIntegration:
+    def test_fleet_publication_matches_streaming_monitor(self):
+        mon = TransferMonitor(None, window=32)
+        rng = np.random.default_rng(5)
+        peers = [f"client://h{i}" for i in range(7)]
+        for t in range(200):
+            p = peers[int(rng.integers(0, len(peers)))]
+            mon.observe_transfer("read", p, int(rng.integers(1 << 20, 64 << 20)), float(rng.uniform(0.5, 4.0)), t)
+        mat, counts, got_peers = mon.history_matrix("read")
+        stats = publish_fleet_stats(mat, counts, got_peers)
+        for i, p in enumerate(got_peers):
+            per = mon.per_source[p]["read"]
+            np.testing.assert_allclose(
+                stats[p]["AvgRDBandwidthToSource"],
+                np.mean(per.as_array()),
+                rtol=1e-5,
+            )
+            np.testing.assert_allclose(
+                stats[p]["EwmaRDBandwidthToSource"], per.ewma.predict(), rtol=1e-4
+            )
+            np.testing.assert_allclose(stats[p]["lastRDBandwidth"], per.last, rtol=1e-6)

@@ -1,0 +1,142 @@
+"""LDIF serialization, LDAP filters, and the LDIF↔ClassAd conversion."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classads import ClassAd, parse_classad
+from repro.core.ldif import (
+    FilterSyntaxError,
+    classad_to_entry,
+    dumps,
+    entry_to_classad,
+    loads,
+    parse_filter,
+)
+
+
+class TestLdifRoundtrip:
+    def test_basic(self):
+        entries = [
+            {
+                "dn": "gss=vol0, o=grid",
+                "objectClass": "Grid::Storage::ServerVolume",
+                "totalSpace": 1000,
+                "availableSpace": 412.5,
+                "mountPoint": "/data",
+                "readonly": True,
+            }
+        ]
+        text = dumps(entries)
+        back = loads(text)
+        assert back == entries
+
+    def test_multivalued(self):
+        entries = [{"dn": "x", "filesystem": ["ext4", "xfs"]}]
+        back = loads(dumps(entries))
+        assert back[0]["filesystem"] == ["ext4", "xfs"]
+
+    def test_continuation_and_comments(self):
+        text = "dn: a\n# comment\nfoo: hello\n world\n"
+        assert loads(text)[0]["foo"] == "helloworld"
+
+
+class TestFilters:
+    ENTRY = {
+        "objectClass": "Grid::Storage::ServerVolume",
+        "availableSpace": 5 * 1024**3,
+        "hostname": "ep001.grid",
+        "zone": "zone3",
+    }
+
+    def test_comparisons(self):
+        assert parse_filter("(availableSpace>=1000)").matches(self.ENTRY)
+        assert not parse_filter("(availableSpace<=1000)").matches(self.ENTRY)
+        assert parse_filter("(zone=zone3)").matches(self.ENTRY)
+        assert parse_filter("(zone=ZONE3)").matches(self.ENTRY)  # case-insensitive
+
+    def test_composite(self):
+        f = parse_filter("(&(availableSpace>=1)(|(zone=zone1)(zone=zone3)))")
+        assert f.matches(self.ENTRY)
+        assert not parse_filter("(!(zone=zone3))").matches(self.ENTRY)
+
+    def test_presence_and_substring(self):
+        assert parse_filter("(hostname=*)").matches(self.ENTRY)
+        assert not parse_filter("(nosuch=*)").matches(self.ENTRY)
+        assert parse_filter("(hostname=ep*)").matches(self.ENTRY)
+        assert parse_filter("(hostname=*grid)").matches(self.ENTRY)
+        assert parse_filter("(hostname=ep*grid)").matches(self.ENTRY)
+        assert not parse_filter("(hostname=xp*)").matches(self.ENTRY)
+
+    def test_objectclass_query(self):
+        # "the broker uses LDAP searches to query GRIS servers"
+        f = parse_filter("(objectClass=Grid::Storage::ServerVolume)")
+        assert f.matches(self.ENTRY)
+
+    def test_attributes_projection_list(self):
+        f = parse_filter("(&(a>=1)(!(b=2)))")
+        assert sorted(f.attributes()) == ["a", "b"]
+
+    def test_syntax_errors(self):
+        for bad in ("", "(", "(a>5)", "(&)", "(a=1"):
+            with pytest.raises(FilterSyntaxError):
+                parse_filter(bad)
+
+
+class TestClassAdConversion:
+    """§6: 'the process of converting data, represented in LDAP format,
+    into ClassAds is not cumbersome and is worth the effort.'"""
+
+    def test_entry_to_classad_values(self):
+        entry = {"dn": "x", "availableSpace": 100, "hostname": "h"}
+        ad = entry_to_classad(entry)
+        assert ad.eval_attr("availableSpace") == 100
+        assert ad.eval_attr("hostname") == "h"
+
+    def test_requirements_string_becomes_expression(self):
+        entry = {"requirements": "other.reqdSpace < 10G"}
+        ad = entry_to_classad(entry)
+        req = parse_classad("reqdSpace = 1024")
+        assert ad.eval_attr("requirements", req) is True
+        req["reqdSpace"] = 20 * 1024**3
+        assert ad.eval_attr("requirements", req) is False
+
+    def test_roundtrip(self):
+        ad = parse_classad('a = 5; b = "x"; requirements = a > 3')
+        entry = classad_to_entry(ad, dn="gss=t")
+        ad2 = entry_to_classad(entry)
+        assert ad2.eval_attr("a") == 5
+        assert ad2.eval_attr("requirements") is True
+
+
+@given(
+    st.dictionaries(
+        st.from_regex(r"[A-Za-z][A-Za-z0-9]{0,10}", fullmatch=True),
+        st.one_of(
+            st.integers(-(10**9), 10**9),
+            st.booleans(),
+            st.from_regex(r"[A-Za-z0-9_./:-]{1,20}", fullmatch=True),
+        ),
+        min_size=1,
+        max_size=8,
+    )
+)
+@settings(max_examples=100, deadline=None)
+def test_prop_ldif_roundtrip(attrs):
+    attrs = {k: v for k, v in attrs.items() if k.lower() != "dn"}
+    if not attrs:
+        return
+    back = loads(dumps([attrs]))
+    assert len(back) == 1
+    got = back[0]
+    for k, v in attrs.items():
+        if isinstance(v, str) and (v in ("TRUE", "FALSE") or _looks_numeric(v)):
+            continue  # typed re-parse is lossy for number-like strings, by design
+        assert got[k] == v
+
+
+def _looks_numeric(s: str) -> bool:
+    try:
+        float(s)
+        return True
+    except ValueError:
+        return False

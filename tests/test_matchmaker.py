@@ -1,0 +1,101 @@
+"""Matchmaking semantics, including the paper's §4/§5.2 worked example."""
+
+import pytest
+
+from repro.core.classads import ClassAd, parse_classad
+from repro.core.matchmaker import Matchmaker, match, rank_value
+
+STORAGE_AD = """
+hostname = "hugo.mcs.anl.gov";
+volume = "/dev/sandbox";
+availableSpace = 50G;
+MaxRDBandwidth = 75K;
+requirements = other.reqdSpace < 10G && other.reqdRDBandwidth < 75K;
+"""
+
+REQUEST_AD = """
+hostname = "comet.xyz.com";
+reqdSpace = 5G;
+reqdRDBandwidth = 50K;
+rank = other.availableSpace;
+requirements = other.availableSpace > 5G && other.MaxRDBandwidth > 50K;
+"""
+
+
+class TestPaperExample:
+    """The exact ads from the paper, §4 (storage) and §5.2 (request)."""
+
+    def test_match_succeeds(self):
+        storage = parse_classad(STORAGE_AD)
+        request = parse_classad(REQUEST_AD)
+        res = match(request, [storage])
+        assert len(res) == 1
+        assert res[0].name == "hugo.mcs.anl.gov"
+        # "we rank the replica servers based on their available space"
+        assert res[0].rank == 50 * 1024**3
+
+    def test_policy_rejects_oversized_request(self):
+        storage = parse_classad(STORAGE_AD)
+        req = parse_classad(REQUEST_AD)
+        req["reqdSpace"] = 20 * 1024**3  # > 10G site policy
+        assert match(req, [storage]) == []
+
+    def test_request_rejects_slow_storage(self):
+        storage = parse_classad(STORAGE_AD)
+        storage["MaxRDBandwidth"] = 10 * 1024  # below the 50K requirement
+        assert match(parse_classad(REQUEST_AD), [storage]) == []
+
+
+class TestTwoSided:
+    def test_undefined_requirements_fail_closed(self):
+        res = parse_classad("requirements = other.nosuchattr > 5")
+        req = parse_classad("requirements = true; rank = 1")
+        assert match(req, [res]) == []
+
+    def test_resource_without_requirements_one_sided(self):
+        res = parse_classad('name = "a"; x = 3')
+        req = parse_classad("requirements = other.x > 2")
+        assert len(match(req, [res])) == 1
+
+    def test_ranking_order_and_tiebreak(self):
+        ads = [
+            parse_classad(f'name = "ep{i}"; bw = {bw}')
+            for i, bw in enumerate([30, 50, 50, 10])
+        ]
+        req = parse_classad("requirements = true; rank = other.bw")
+        res = match(req, ads)
+        assert [m.name for m in res] == ["ep1", "ep2", "ep0", "ep3"]  # ties by name
+
+    def test_rank_undefined_is_zero(self):
+        res = parse_classad('name = "a"')
+        req = parse_classad("requirements = true; rank = other.nosuch")
+        assert match(req, [res])[0].rank == 0.0
+
+    def test_boolean_rank(self):
+        a = parse_classad('name = "a"; fast = true')
+        b = parse_classad('name = "b"; fast = false')
+        req = parse_classad("requirements = true; rank = other.fast")
+        res = match(req, [a, b])
+        assert res[0].name == "a" and res[0].rank == 1.0
+
+    def test_top_k(self):
+        ads = [parse_classad(f'name = "e{i}"; bw = {i}') for i in range(10)]
+        req = parse_classad("requirements = true; rank = other.bw")
+        res = match(req, ads, top_k=3)
+        assert [m.rank for m in res] == [9.0, 8.0, 7.0]
+
+
+class TestDeterminism:
+    def test_independent_matchmakers_agree(self):
+        """Decentralization invariant: same published state ⇒ same decision."""
+        ads = [parse_classad(f'name = "e{i}"; bw = {(i * 37) % 11}') for i in range(20)]
+        req = parse_classad("requirements = other.bw >= 3; rank = other.bw")
+        r1 = Matchmaker().match(req, ads)
+        r2 = Matchmaker().match(req, list(ads))
+        assert [m.name for m in r1] == [m.name for m in r2]
+
+    def test_env_time_deterministic(self):
+        res = parse_classad('name = "a"; ts = 100')
+        req = parse_classad("requirements = time() - other.ts < 50; rank = 0")
+        assert Matchmaker({"now": 120}).match(req, [res])
+        assert not Matchmaker({"now": 200}).match(req, [res])

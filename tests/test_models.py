@@ -1,0 +1,136 @@
+"""Model-stack numerics: flash==dense, chunked CE, decode==forward,
+MoE dispatch invariants, SSD decode==scan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.models.attention import _dense_attention, _flash_attention
+from repro.models.layers import chunked_cross_entropy, cross_entropy
+from repro.models.moe import apply_moe, capacity, init_moe
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("window", [None, 700])
+    def test_matches_dense(self, window):
+        rng = jax.random.PRNGKey(0)
+        q = jax.random.normal(rng, (2, 4096, 8, 32), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(1), (2, 4096, 2, 32), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(2), (2, 4096, 2, 32), jnp.float32)
+        ref = _dense_attention(q, k, v, causal=True, window=window)
+        out = _flash_attention(q, k, v, causal=True, window=window,
+                               q_chunk=512, kv_chunk=1024)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+    def test_grad_matches_dense(self):
+        rng = jax.random.PRNGKey(3)
+        q = jax.random.normal(rng, (1, 2048, 4, 16), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(4), (1, 2048, 4, 16), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(5), (1, 2048, 4, 16), jnp.float32)
+        g1 = jax.grad(lambda q: _flash_attention(q, k, v, causal=True, window=None).sum())(q)
+        g2 = jax.grad(lambda q: _dense_attention(q, k, v, causal=True, window=None).sum())(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+    def test_noncausal(self):
+        rng = jax.random.PRNGKey(6)
+        q = jax.random.normal(rng, (1, 4096, 4, 16), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(7), (1, 4096, 4, 16), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(8), (1, 4096, 4, 16), jnp.float32)
+        ref = _dense_attention(q, k, v, causal=False, window=None)
+        out = _flash_attention(q, k, v, causal=False, window=None)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+class TestChunkedCE:
+    def test_value_and_grads(self):
+        B, S, D, V = 2, 64, 32, 977
+        h = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+        w = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (D, V))
+        lab = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+        lab = lab.at[0, :5].set(-100)
+        dense = lambda h, w: cross_entropy(h @ w, lab)[0]
+        chunk = lambda h, w: chunked_cross_entropy(h, w, lab, chunk=16)[0]
+        np.testing.assert_allclose(dense(h, w), chunk(h, w), rtol=1e-6)
+        g1 = jax.grad(dense, argnums=(0, 1))(h, w)
+        g2 = jax.grad(chunk, argnums=(0, 1))(h, w)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+class TestMoE:
+    def test_output_shape_and_aux(self):
+        cfg = get_arch("granite-moe-3b-a800m").reduced()
+        params = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model), jnp.float32)
+        y, aux = apply_moe(params, x, cfg)
+        assert y.shape == x.shape
+        assert float(aux) > 0  # balance loss active
+
+    def test_capacity_drops_bounded(self):
+        assert capacity(1024, 2, 8, 1.25) >= 1024 * 2 * 1.25 / 8
+        assert capacity(8, 1, 64, 1.0) == 8  # floor
+
+    def test_gate_weighting_sums_to_one_effect(self):
+        """With capacity ≫ tokens nothing drops: output is a convex
+        combination of expert outputs (scale bounded by max expert)."""
+        cfg = get_arch("granite-moe-3b-a800m").reduced()
+        params = init_moe(jax.random.PRNGKey(0), cfg)
+        x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+        y, _ = apply_moe(params, x, cfg)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize(
+        "arch", ["mistral-nemo-12b", "h2o-danube3-4b", "mamba2-130m", "jamba-v0.1-52b", "whisper-base"]
+    )
+    def test_teacher_forced_decode_matches_forward(self, arch):
+        cfg = get_arch(arch).reduced()
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 1, 32
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 4, cfg.vocab_size).astype(jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.enc_dec:
+            batch["frames"] = 0.01 * jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        logits_full, _ = T.forward(params, batch, cfg)
+        pre = dict(batch)
+        pre["tokens"] = toks[:, : S - 1]
+        pre.pop("labels")
+        lp, caches = T.prefill(params, pre, cfg, max_seq=64)
+        np.testing.assert_allclose(
+            np.asarray(lp), np.asarray(logits_full[:, S - 2]), rtol=3e-2, atol=3e-2
+        )
+        ld, _ = T.decode_step(params, toks[:, S - 1 : S], caches,
+                              jnp.full((B,), S - 1, jnp.int32), cfg)
+        np.testing.assert_allclose(
+            np.asarray(ld), np.asarray(logits_full[:, S - 1]), rtol=3e-2, atol=3e-2
+        )
+
+    def test_vlm_prefill_decode(self):
+        cfg = get_arch("llava-next-34b").reduced()
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 1, 24
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 4, cfg.vocab_size).astype(jnp.int32)
+        patches = 0.01 * jnp.ones((B, cfg.n_patches, cfg.d_model), jnp.float32)
+        lp, caches = T.prefill(params, {"tokens": toks, "patch_embeds": patches}, cfg, max_seq=64)
+        assert np.isfinite(np.asarray(lp)).all()
+        ld, _ = T.decode_step(params, toks[:, -1:], caches,
+                              jnp.full((B,), cfg.n_patches + S, jnp.int32), cfg)
+        assert np.isfinite(np.asarray(ld)).all()
+
+
+class TestParamAccounting:
+    @pytest.mark.parametrize("arch", ["granite-20b", "jamba-v0.1-52b", "mamba2-130m"])
+    def test_reduced_param_count_matches_tree(self, arch):
+        """param_counts() (used for MODEL_FLOPS) must track the real tree."""
+        cfg = get_arch(arch).reduced()
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        pc = cfg.param_counts()
+        predicted = pc["total"] + pc["embedding"]
+        if cfg.positional == "learned":
+            predicted += params["pos_embed"].size
+        assert abs(actual - predicted) / predicted < 0.05, (actual, predicted)

@@ -1,0 +1,115 @@
+"""Bandwidth predictors: streaming correctness + NWS-style adaptation."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predictors import (
+    AdaptivePredictor,
+    Ewma,
+    LastValue,
+    RunningMean,
+    SlidingMean,
+    SlidingMedian,
+    make_predictor,
+)
+
+
+series = st.lists(
+    st.floats(min_value=1.0, max_value=1e9, allow_nan=False), min_size=1, max_size=64
+)
+
+
+class TestBasics:
+    def test_empty_predicts_none(self):
+        for kind in ("last", "mean", "sliding_mean", "sliding_median", "ewma", "adaptive"):
+            assert make_predictor(kind).predict() is None
+
+    @given(series)
+    @settings(max_examples=100, deadline=None)
+    def test_last(self, xs):
+        p = LastValue()
+        p.update_many(xs)
+        assert p.predict() == xs[-1]
+
+    @given(series)
+    @settings(max_examples=100, deadline=None)
+    def test_running_mean_and_std(self, xs):
+        p = RunningMean()
+        p.update_many(xs)
+        assert p.predict() == pytest.approx(np.mean(xs), rel=1e-9)
+        assert p.std == pytest.approx(np.std(xs), rel=1e-6, abs=1e-6)
+
+    @given(series, st.integers(1, 16))
+    @settings(max_examples=100, deadline=None)
+    def test_sliding_window(self, xs, w):
+        pm = SlidingMean(w)
+        pmed = SlidingMedian(w)
+        pm.update_many(xs)
+        pmed.update_many(xs)
+        tail = xs[-w:]
+        assert pm.predict() == pytest.approx(np.mean(tail), rel=1e-9)
+        assert pmed.predict() == pytest.approx(np.median(tail), rel=1e-9)
+
+    @given(series)
+    @settings(max_examples=100, deadline=None)
+    def test_ewma_recursion(self, xs):
+        p = Ewma(0.25)
+        p.update_many(xs)
+        v = xs[0]
+        for x in xs[1:]:
+            v = 0.25 * x + 0.75 * v
+        assert p.predict() == pytest.approx(v, rel=1e-9)
+
+
+class TestAdaptive:
+    def test_picks_last_on_trending_series(self):
+        """On a monotone ramp, last-value beats the long-run mean."""
+        p = AdaptivePredictor()
+        for t in range(200):
+            p.update(1000.0 + 10.0 * t)
+        assert p.best_member().name in ("last", "ewma", "sliding_mean", "sliding_median")
+        pred = p.predict()
+        truth = 1000.0 + 10.0 * 200
+        mean_err = abs(np.mean([1000 + 10 * t for t in range(200)]) - truth)
+        assert abs(pred - truth) < mean_err / 2
+
+    def test_picks_robust_on_noisy_stationary(self):
+        rng = np.random.default_rng(0)
+        xs = 1e6 + rng.normal(0, 1e5, 500)
+        xs[::50] = 1e3  # outlier dropouts
+        p = AdaptivePredictor()
+        p.update_many(xs.tolist())
+        # adaptive must not be fooled into predicting the outlier level
+        assert p.predict() > 5e5
+
+    def test_adaptive_beats_worst_member(self):
+        rng = np.random.default_rng(1)
+        xs = np.concatenate([
+            np.full(100, 1e6) + rng.normal(0, 1e4, 100),
+            np.full(100, 2e5) + rng.normal(0, 1e4, 100),  # regime change
+        ])
+        members = {
+            "last": LastValue(), "mean": RunningMean(), "ewma": Ewma(0.25),
+        }
+        adaptive = AdaptivePredictor()
+        errs = {k: [] for k in members}
+        errs["adaptive"] = []
+        for x in xs:
+            for k, m in members.items():
+                if m.predict() is not None:
+                    errs[k].append(abs(m.predict() - x))
+                m.update(x)
+            if adaptive.predict() is not None:
+                errs["adaptive"].append(abs(adaptive.predict() - x))
+            adaptive.update(x)
+        mae = {k: np.mean(v) for k, v in errs.items()}
+        assert mae["adaptive"] <= max(mae["last"], mae["mean"], mae["ewma"])
+        assert mae["adaptive"] < mae["mean"]  # mean is terrible across regimes
+
+
+def test_make_predictor_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_predictor("nope")

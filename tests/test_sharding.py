@@ -1,0 +1,126 @@
+"""ShardingPolicy: divisibility fallbacks, axis-uniqueness, tree mapping.
+
+Single-device process: policies are constructed against *abstract* meshes
+(we only inspect the PartitionSpecs, never place arrays)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_arch
+from repro.models import transformer as T
+from repro.parallel.sharding import ShardingPolicy, tree_specs
+
+
+class FakeMesh:
+    """Axis-name/size stand-in (ShardingPolicy only reads names+shape)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def mesh16():
+    return FakeMesh(data=16, model=16)
+
+
+def spec_entries(spec):
+    out = []
+    for e in spec:
+        if isinstance(e, tuple):
+            out += list(e)
+        elif e is not None:
+            out.append(e)
+    return out
+
+
+class TestParamRules:
+    def test_tp_sharding_basics(self):
+        p = ShardingPolicy(mesh=mesh16())
+        assert p.param_spec("embedding", (49152, 6144)) == P("model", None)
+        assert p.param_spec("head", (6144, 49152)) == P(None, "model")
+        assert p.param_spec("slots/0/attn/wq", (52, 6144, 6144)) == P(None, None, "model")
+        assert p.param_spec("slots/0/attn/wo", (52, 6144, 6144)) == P(None, "model", None)
+        assert p.param_spec("slots/0/mlp/wi", (52, 6144, 24576)) == P(None, None, "model")
+
+    def test_divisibility_fallback_replicates(self):
+        p = ShardingPolicy(mesh=mesh16())
+        # whisper-base: 8 heads × 64 = 512 !% 16 → replicate, recorded
+        assert p.param_spec("slots/0/attn/wq", (6, 512, 520)) == P(None, None, None)
+        assert any("wq" in f for f in p.explain())
+
+    def test_no_duplicate_axes_with_zero3(self):
+        cfg = get_arch("nemotron-4-340b")
+        params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        p = ShardingPolicy(mesh=mesh16(), zero3=True)
+        specs = tree_specs(params, p.param_spec)
+        for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+            entries = spec_entries(spec)
+            assert len(entries) == len(set(entries)), spec
+
+    def test_zero3_shards_over_data(self):
+        p = ShardingPolicy(mesh=mesh16(), zero3=True)
+        spec = p.param_spec("slots/0/mlp/wo", (96, 73728, 18432))
+        assert "data" in spec_entries(spec) and "model" in spec_entries(spec)
+
+    def test_moe_expert_parallel_toggle(self):
+        p_tp = ShardingPolicy(mesh=mesh16(), expert_parallel=False)
+        p_ep = ShardingPolicy(mesh=mesh16(), expert_parallel=True)
+        shape = (32, 16, 4096, 14336)  # jamba: 16 experts
+        assert p_tp.param_spec("slots/1/moe/wi", shape) == P(None, None, None, "model")
+        assert p_ep.param_spec("slots/1/moe/wi", shape) == P(None, "model", None, None)
+        # 40 experts don't divide 16 → EP falls back to TP
+        p_ep2 = ShardingPolicy(mesh=mesh16(), expert_parallel=True)
+        spec = p_ep2.param_spec("slots/0/moe/wi", (32, 40, 1536, 512))
+        assert spec == P(None, None, None, "model")
+
+    def test_ssm_head_parallel(self):
+        p = ShardingPolicy(mesh=mesh16())
+        # jamba: d_inner 8192 → shard; dt (nh=128) aligned
+        assert p.param_spec("slots/0/ssm/x_proj", (4, 4096, 8192)) == P(None, None, "model")
+        assert p.param_spec("slots/0/ssm/dt_proj", (4, 4096, 128)) == P(None, None, "model")
+        assert p.param_spec("slots/0/ssm/bc_proj", (4, 4096, 32)) == P(None, None, None)
+
+
+class TestOptAndCacheRules:
+    def test_qtensor_blocks_spread_over_all_axes(self):
+        p = ShardingPolicy(mesh=mesh16())
+        spec = p.opt_spec("mu/slots/0/mlp/wi/q", (96, 5308416, 256))
+        ents = spec_entries(spec)
+        assert "data" in ents and "model" in ents
+
+    def test_qtensor_falls_to_lead_dim(self):
+        p = ShardingPolicy(mesh=mesh16())
+        # blocks/row = 72 (!% 16) but lead (vocab) shards
+        spec = p.opt_spec("mu/embedding/q", (256000, 72, 256))
+        assert spec[0] is not None
+
+    def test_cache_batch_sharded(self):
+        p = ShardingPolicy(mesh=mesh16(), cache_kv_heads=8)
+        spec = p.cache_spec("kv/0/k", (1, 128, 32768, 8, 128))
+        assert spec[1] is not None  # batch over data
+        # 8 kv heads !% 16 → heads replicated
+        assert spec[3] is None
+
+    def test_cache_seq_sharding_for_long_ctx(self):
+        p = ShardingPolicy(mesh=mesh16(), cache_kv_heads=8, seq_shard_cache=True)
+        k_spec = p.cache_spec("kv/0/k", (1, 1, 524288, 8, 128))
+        pos_spec = p.cache_spec("kv/0/pos", (1, 1, 524288))
+        assert k_spec[2] is not None  # sequence sharded
+        assert pos_spec[2] == k_spec[2]  # masking stays aligned
+
+    def test_kv_head_divisible_shards_heads(self):
+        p = ShardingPolicy(mesh=mesh16(), cache_kv_heads=16)
+        spec = p.cache_spec("kv/0/k", (1, 128, 32768, 16, 128))
+        assert spec[3] == "model"
+
+
+class TestBatchSpecs:
+    def test_batch_over_dp_axes(self):
+        p = ShardingPolicy(mesh=FakeMesh(pod=2, data=16, model=16))
+        assert p.batch_spec((256, 4096)) == P(("pod", "data"), None)
+
+    def test_indivisible_batch_replicates(self):
+        p = ShardingPolicy(mesh=mesh16())
+        assert p.batch_spec((1, 4096)) == P(None, None)

@@ -1,0 +1,84 @@
+"""End-to-end system test: the paper's full pipeline as one scenario.
+
+Builds a heterogeneous grid, replicates a dataset, trains a reduced model
+with broker-selected shard fetches under injected faults, checkpoints
+with write-side matchmaking, kills the best endpoints, and verifies that
+(a) training completes, (b) selection adapted (history-driven re-ranking
+actually changed decisions), (c) the checkpoint restores bit-exact from
+the surviving replicas."""
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_arch
+from repro.core.broker import default_read_request
+from repro.data.datasets import ShardManifest, SyntheticCorpus, materialize_on_grid
+from repro.data.pipeline import BatchSpec, DataPipeline
+from repro.storage.endpoint import build_demo_grid
+from repro.storage.faults import FaultEvent, FaultInjector
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.optim import AdamWConfig
+from repro.train.train_step import TrainConfig
+
+
+def test_end_to_end_grid_training_with_faults():
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    grid = build_demo_grid(8, 4, seed=42)
+    grid.add_client("client://host0", zone="zone1")
+
+    man = ShardManifest("e2e", 8, tokens_per_shard=25_000, vocab_size=cfg.vocab_size, seed=5)
+    materialize_on_grid(SyntheticCorpus(man), grid, replication=2)
+
+    pipe = DataPipeline("client://host0", 0, 1, grid, man, BatchSpec(8, 64), cache_shards=2)
+    broker = grid.broker_for("client://host0")
+    ckpt = CheckpointManager("e2e", grid, broker, replication=2, chunk_bytes=1 << 20)
+
+    inj = FaultInjector(grid)
+    inj.schedule_event(FaultEvent(0.2, "kill", "gsiftp://ep002"))
+    inj.schedule_event(FaultEvent(0.4, "degrade", "gsiftp://ep005", 0.05))
+
+    tc = TrainConfig(optimizer=AdamWConfig(lr=3e-3), n_microbatches=2,
+                     warmup_steps=2, total_steps=50)
+    loop = TrainLoop(cfg, tc, LoopConfig(total_steps=35, checkpoint_every=15),
+                     pipe, ckpt, faults=inj)
+    state = loop.run()
+
+    # (a) completed, loss went down despite faults
+    losses = loop.losses()
+    assert len(losses) == 35
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+    # (b) the paper's loop is live: GRIS per-source stats exist for us
+    served = [
+        ep for ep, e in grid.endpoints.items()
+        if "client://host0" in e.monitor.per_source
+    ]
+    assert served, "no endpoint instrumented our transfers"
+    # and ranking is history-driven now (rank values are observed B/s)
+    ranked = broker.select(man.lfn(0), default_read_request("client://host0"))
+    assert ranked[0].rank > 0
+
+    # (c) checkpoint survives losing its top-ranked replica holder
+    ckpt.save(999, state)  # snapshot the exact final state
+    step = ckpt.latest_step()
+    assert step == 999
+    manifest = ckpt.load_manifest(step)
+    holder = grid.catalog.lookup(manifest["leaves"][0]["chunks"][0]["lfn"])[0].endpoint
+    grid.drop_endpoint(holder)
+    template = jax.eval_shape(lambda: state)
+    restored = ckpt.restore(step, template)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decentralized_selection_identical_across_clients():
+    """Two same-zone clients with identical published state make identical
+    decisions with zero shared broker state (§5.1.1)."""
+    grid = build_demo_grid(6, 3, seed=9)
+    grid.add_client("client://a", zone="zone0")
+    grid.add_client("client://b", zone="zone0")
+    grid.replicate("f", b"q" * (1 << 20), grid.alive_endpoints()[:4])
+    ra = [r.pfn.endpoint for r in grid.broker_for("client://a").select("f")]
+    rb = [r.pfn.endpoint for r in grid.broker_for("client://b").select("f")]
+    assert ra == rb

@@ -1,0 +1,163 @@
+"""Training-loop fault tolerance: convergence, checkpoint/restart under
+chaos, straggler detection, optimizer variants, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_arch
+from repro.data.datasets import ShardManifest, SyntheticCorpus, materialize_on_grid
+from repro.data.pipeline import BatchSpec, DataPipeline
+from repro.parallel.collectives import (
+    compress_with_feedback,
+    init_error_feedback,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.storage.endpoint import build_demo_grid
+from repro.storage.faults import FaultEvent, FaultInjector
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.optim import AdamWConfig, adamw_update, init_adamw, warmup_cosine
+from repro.train.straggler import StragglerMonitor
+from repro.train.train_step import TrainConfig
+
+
+def build_env(seed=3, shards=8, tokens=30_000):
+    cfg = get_arch("h2o-danube3-4b").reduced()
+    grid = build_demo_grid(6, 3, seed=seed)
+    grid.add_client("client://host0", zone="zone0")
+    man = ShardManifest("toy", shards, tokens, cfg.vocab_size, seed=1)
+    materialize_on_grid(SyntheticCorpus(man), grid, replication=2)
+    pipe = DataPipeline("client://host0", 0, 1, grid, man, BatchSpec(8, 64))
+    broker = grid.broker_for("client://host0")
+    ckpt = CheckpointManager("run", grid, broker, replication=2, chunk_bytes=1 << 20)
+    return cfg, grid, pipe, ckpt
+
+
+class TestOptim:
+    def test_adamw_quadratic_convergence(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+        params = {"x": jnp.asarray([5.0, -3.0])}
+        state = init_adamw(params, cfg)
+        for _ in range(200):
+            grads = {"x": 2 * params["x"]}  # d/dx x²
+            params, state, _ = adamw_update(grads, state, params, cfg, jnp.float32(0.1))
+        assert np.abs(np.asarray(params["x"])).max() < 1e-2
+
+    def test_int8_moments_track_float32(self):
+        cfgf = AdamWConfig(lr=0.05, weight_decay=0.0, moments_dtype="float32")
+        cfgq = AdamWConfig(lr=0.05, weight_decay=0.0, moments_dtype="int8")
+        pf = {"w": jnp.asarray(np.linspace(-2, 2, 512), jnp.float32).reshape(2, 256)}
+        pq = jax.tree.map(jnp.copy, pf)
+        sf, sq = init_adamw(pf, cfgf), init_adamw(pq, cfgq)
+        for i in range(50):
+            g = jax.tree.map(lambda w: 2 * w + 0.1 * np.sin(i), pf)
+            pf, sf, _ = adamw_update(g, sf, pf, cfgf, jnp.float32(0.05))
+            gq = jax.tree.map(lambda w: 2 * w + 0.1 * np.sin(i), pq)
+            pq, sq, _ = adamw_update(gq, sq, pq, cfgq, jnp.float32(0.05))
+        np.testing.assert_allclose(
+            np.asarray(pf["w"]), np.asarray(pq["w"]), atol=0.05
+        )
+
+    def test_warmup_cosine_shape(self):
+        lrs = [float(warmup_cosine(jnp.asarray(s), peak_lr=1.0, warmup=10, total=100)) for s in range(100)]
+        assert lrs[0] == 0.0 and abs(lrs[10] - 1.0) < 1e-6
+        assert lrs[99] < 0.2 and all(l >= 0 for l in lrs)
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 1, 10_000), jnp.float32)
+        q, s = quantize_int8(x)
+        back = dequantize_int8(q, s, x.shape)
+        rel = float(jnp.abs(back - x).max() / jnp.abs(x).max())
+        assert rel < 0.02
+
+    def test_error_feedback_unbiased_over_time(self):
+        """With EF, the *sum* of compressed grads tracks the true sum."""
+        rng = np.random.default_rng(1)
+        grads = [{"w": jnp.asarray(rng.normal(0, 1, 256), jnp.float32)} for _ in range(50)]
+        ef = init_error_feedback(grads[0])
+        total_true = jnp.zeros(256)
+        total_comp = jnp.zeros(256)
+        for g in grads:
+            cg, ef, _ = compress_with_feedback(g, ef)
+            total_true += g["w"]
+            total_comp += cg["w"]
+        resid = float(jnp.abs(total_true - total_comp).max())
+        assert resid < 0.05  # bounded by one step's quantization error
+
+    def test_training_converges_with_compression(self):
+        cfg, grid, pipe, ckpt = build_env()
+        tc = TrainConfig(
+            optimizer=AdamWConfig(lr=3e-3), n_microbatches=1,
+            warmup_steps=2, total_steps=40, grad_compression=True,
+        )
+        loop = TrainLoop(cfg, tc, LoopConfig(total_steps=30, checkpoint_every=100), pipe, None)
+        loop.run()
+        losses = loop.losses()
+        assert np.mean(losses[-5:]) < losses[0] - 0.5
+
+
+class TestFaultTolerantLoop:
+    def test_loss_decreases_and_resume(self):
+        cfg, grid, pipe, ckpt = build_env()
+        tc = TrainConfig(optimizer=AdamWConfig(lr=3e-3), n_microbatches=2,
+                         warmup_steps=2, total_steps=60)
+        loop = TrainLoop(cfg, tc, LoopConfig(total_steps=40, checkpoint_every=20), pipe, ckpt)
+        loop.run()
+        losses = loop.losses()
+        assert np.mean(losses[-8:]) < np.mean(losses[:8]) - 0.3
+        loop2 = TrainLoop(cfg, tc, LoopConfig(total_steps=40), pipe, ckpt)
+        _, start = loop2.init_or_resume()
+        assert start == 40
+
+    def test_survives_scheduled_endpoint_kills(self):
+        cfg, grid, pipe, ckpt = build_env()
+        inj = FaultInjector(grid)
+        # kill two endpoints mid-run (replication=2 keeps every shard alive)
+        inj.schedule_event(FaultEvent(0.5, "kill", "gsiftp://ep001"))
+        inj.schedule_event(FaultEvent(1.0, "degrade", "gsiftp://ep004", 0.05))
+        tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3), warmup_steps=2, total_steps=30)
+        loop = TrainLoop(cfg, tc, LoopConfig(total_steps=25, checkpoint_every=10),
+                         pipe, ckpt, faults=inj)
+        loop.run()
+        assert len(loop.losses()) == 25
+        assert any("fault@" in e for e in loop.events)
+        assert ckpt.latest_step() is not None
+
+
+class TestStragglerMonitor:
+    def test_detects_persistent_straggler(self):
+        mon = StragglerMonitor(patience=3)
+        actions = []
+        for step in range(20):
+            times = {f"h{i}": 1.0 + 0.01 * i for i in range(8)}
+            times["h7"] = 1.0 if step < 5 else 4.0  # h7 degrades at step 5
+            actions += mon.observe_step(step, times)
+        assert any(a.host == "h7" for a in actions)
+        kinds = {a.kind for a in actions if a.host == "h7"}
+        assert kinds & {"rebalance", "exclude"}
+
+    def test_no_false_positives_on_noise(self):
+        rng = np.random.default_rng(0)
+        mon = StragglerMonitor(patience=3)
+        actions = []
+        for step in range(50):
+            times = {f"h{i}": float(1.0 + rng.normal(0, 0.02)) for i in range(8)}
+            actions += mon.observe_step(step, times)
+        assert actions == []
+
+    def test_excluded_host_leaves_fleet_stats(self):
+        mon = StragglerMonitor(patience=1, z_exclude=4.0)
+        for step in range(10):
+            times = {f"h{i}": 1.0 for i in range(7)}
+            times["bad"] = 50.0
+            mon.observe_step(step, times)
+        assert "bad" in mon.excluded
+        s = mon.fleet_summary()
+        assert s["excluded_hosts"] == 1.0
+        assert s["straggler_overhead"] < 0.1
