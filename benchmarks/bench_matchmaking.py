@@ -8,9 +8,14 @@ Phase at fleet scale: one request matched+ranked against S replica ads,
   * columnar  — the ClassAd→columnar compiler under numpy (f64),
   * kernel    — conjunctive-threshold lowering through the fused
                 matchrank kernel (interpret-mode Pallas on CPU; on TPU the
-                same call runs compiled — see DESIGN.md §3).
+                same call runs compiled — see DESIGN.md §3),
+  * batched   — the multi-request engine (DESIGN.md §4): B requests vs one
+                resident snapshot, rank-order sparse top-k on CPU
+                (``match_batched_b{8,64}_s{1k,10k}`` rows, with a
+                batched-vs-sequential speedup row).
 
-Rows: (name, µs/call, derived = matches/sec per 1k candidates).
+Rows: (name, µs/call, derived = matches/sec per 1k candidates — for
+batched rows, request·candidates/sec; for speedup rows, the ratio).
 """
 
 import time
@@ -55,8 +60,18 @@ def make_world(s, seed=0):
     return attrs, valid, views
 
 
-def _time(fn, reps):
-    fn()  # warm
+def _time(fn, reps, *, tol=0.25, max_warm=8):
+    """Warm until two consecutive calls agree within ``tol`` (relative),
+    so jit compilation / cache-fill time can't leak into the first timed
+    rep on fresh shapes; bounded by ``max_warm`` calls for noisy-fast fns."""
+    prev = None
+    for _ in range(max_warm):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        if prev is not None and abs(dt - prev) <= tol * max(dt, prev):
+            break
+        prev = dt
     t0 = time.perf_counter()
     for _ in range(reps):
         fn()
@@ -65,6 +80,7 @@ def _time(fn, reps):
 
 def run():
     rows = []
+    steady_us = {}
     request = parse_classad(REQUEST_SRC)
     for s in (100, 1000, 10000):
         attrs, valid, views = make_world(s)
@@ -89,6 +105,7 @@ def run():
             return int(_np.argmax(_np.where(mask, rank, -_np.inf)))
 
         us_w = _time(steady, max(reps, 20))
+        steady_us[s] = us_w
         plan = lower_request(request, NAMES)
         us_k = _time(lambda: matchrank(attrs, valid, plan), max(reps, 10))
 
@@ -100,6 +117,65 @@ def run():
         # which is the same program the kernel runs compiled on TPU.
         rows.append((f"match_kernel_interpret_s{s}", us_k, s / us_k * 1e6))
         rows.append((f"match_speedup_steady_vs_interp_s{s}", 0.0, us_i / us_w))
+
+    # ---- batched engine: snapshot + plan cache + rank-order top-k ----
+    # The fleet scenario (DESIGN.md §4): B concurrent requests answered
+    # against ONE device-resident snapshot. Snapshot build, plan lowering
+    # and the per-(epoch, rank-weights) sort happen once per GRIS epoch /
+    # request shape — exactly the amortization the engine exists for —
+    # so they sit outside the timed region, like the steady columnar row.
+    from repro.core.plancache import PlanCache
+    from repro.core.snapshot import ReplicaSnapshot
+    from repro.kernels.matchrank.ops import matchrank_batched, matchrank_batched_topk
+
+    for s in (1000, 10000):
+        tag = "1k" if s == 1000 else "10k"
+        _, _, views = make_world(s)
+        snap = ReplicaSnapshot([v.entry for v in views])
+        attrs_l, valid_l = snap.logical_columns()
+        pc = PlanCache()
+        for b in (8, 64):
+            batch = [
+                parse_classad(REQUEST_SRC.replace("5G", f"{4 + i % 4}G"))
+                for i in range(b)
+            ]
+            plans = [pc.kernel_plan(r, snap.vocab_key()) for r in batch]
+
+            def batched():
+                return matchrank_batched_topk(
+                    attrs_l, valid_l, plans, k=1, rank_order=snap.rank_order
+                )
+
+            us_b = _time(batched, 50)
+            rows.append((f"match_batched_b{b}_s{tag}", us_b, b * s / us_b * 1e6))
+            if b == 64:
+                rows.append(
+                    (
+                        f"match_batched_vs_sequential_b{b}_s{tag}",
+                        0.0,
+                        b * steady_us[s] / us_b,
+                    )
+                )
+        if s == 10000:
+            # the dense batched launch (what the same call runs on TPU;
+            # interpret-free jnp ref on CPU) — kept for the trajectory,
+            # it is why the CPU steady state takes the sparse walk
+            plans64 = [
+                pc.kernel_plan(
+                    parse_classad(REQUEST_SRC.replace("5G", f"{4 + i % 4}G")),
+                    snap.vocab_key(),
+                )
+                for i in range(64)
+            ]
+            da, dv, dn = snap.device_columns()
+
+            def dense():
+                return matchrank_batched(
+                    da, dv, plans64, n_rows=dn, k=1, use_kernel=False
+                )
+
+            us_d = _time(dense, 2, max_warm=3)
+            rows.append((f"match_batched_dense_b64_s{tag}", us_d, 64 * s / us_d * 1e6))
 
     # LDIF→ClassAd conversion throughput (the §6 'not cumbersome' claim)
     _, _, views = make_world(1000, seed=1)

@@ -10,17 +10,31 @@ checks the paper's qualitative claims hold quantitatively:
   * the information plane's TTL caching pays (§3.1),
   * the data plane survives failover/straggler injection.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only <prefix>]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only <prefix>] [--json [PATH]]
+
+``--json`` additionally writes the rows + claim checks to
+``BENCH_matchmaking.json`` (or PATH) so the perf trajectory accumulates
+run over run instead of living only in CI logs.
 """
 
 import argparse
+import json
 import sys
+import time
 import traceback
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run only benches whose module name contains this")
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="BENCH_matchmaking.json",
+        default=None,
+        metavar="PATH",
+        help="write rows + checks as JSON (default: BENCH_matchmaking.json)",
+    )
     args = ap.parse_args()
 
     from . import (
@@ -63,6 +77,9 @@ def main() -> None:
     if "match_speedup_steady_vs_interp_s10000" in derived:
         checks.append(("steady-state columnar >=10x interpreter @10k ads",
                        derived["match_speedup_steady_vs_interp_s10000"] >= 10))
+    if "match_batched_vs_sequential_b64_s10k" in derived:
+        checks.append(("batched B=64 engine >=5x sequential columnar-steady @10k ads",
+                       derived["match_batched_vs_sequential_b64_s10k"] >= 5))
     if "selection_gain_predicted_vs_random" in derived:
         checks.append(("history-based selection beats random",
                        derived["selection_gain_predicted_vs_random"] >= 1.0))
@@ -78,6 +95,23 @@ def main() -> None:
     bad = [c for c, ok in checks if not ok]
     for c, ok in checks:
         print(f"# CHECK {'PASS' if ok else 'FAIL'}: {c}", file=sys.stderr)
+
+    if args.json:
+        payload = {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "only": args.only,
+            "rows": [
+                {"name": name, "us_per_call": round(us, 2), "derived": d}
+                for name, us, d in rows
+            ],
+            "checks": [{"name": c, "pass": bool(ok)} for c, ok in checks],
+            "failures": [name for name, _ in failures],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+
     if failures or bad:
         sys.exit(1)
 

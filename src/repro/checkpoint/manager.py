@@ -197,8 +197,11 @@ class CheckpointManager:
                     steps.append(step)
         return max(steps) if steps else None
 
-    def _fetch(self, lfn: str) -> bytes:
-        out = self.broker.fetch(lfn, self.transfer, default_read_request(self.broker.client_url))
+    def _fetch(self, lfn: str, ranked=None) -> bytes:
+        if ranked is not None:
+            out = self.broker.access(lfn, ranked, self.transfer)
+        else:
+            out = self.broker.fetch(lfn, self.transfer, default_read_request(self.broker.client_url))
         return out.payload
 
     def load_manifest(self, step: int) -> Dict[str, Any]:
@@ -211,11 +214,17 @@ class CheckpointManager:
         *,
         mesh=None,
         spec_fn: Optional[Callable] = None,
+        scheduler=None,
     ) -> Any:
         """Restore into the structure of ``template`` (any pytree with the
         same leaf count/order). With (mesh, spec_fn), leaves are placed
         sharded — restoring into a *different* mesh than the save is the
-        elastic-scaling path."""
+        elastic-scaling path.
+
+        With ``scheduler`` (a :class:`repro.serve.scheduler.BatchScheduler`
+        over this manager's broker), every chunk's replica selection is
+        coalesced into batched kernel launches up front; only the Access
+        Phase then runs per chunk."""
         import jax
 
         manifest = self.load_manifest(step)
@@ -224,11 +233,18 @@ class CheckpointManager:
             raise CheckpointError(
                 f"template has {len(leaves_t)} leaves, checkpoint {manifest['n_leaves']}"
             )
+        tickets = {}
+        if scheduler is not None:
+            for rec in manifest["leaves"]:
+                for ch in rec["chunks"]:
+                    tickets[ch["lfn"]] = scheduler.submit(ch["lfn"])
+            scheduler.flush()
         out_leaves: List[Any] = []
         for li, rec in enumerate(manifest["leaves"]):
             parts: List[bytes] = []
             for ch in rec["chunks"]:
-                data = self._fetch(ch["lfn"])
+                t = tickets.get(ch["lfn"])
+                data = self._fetch(ch["lfn"], ranked=t.result() if t else None)
                 if data_checksum(data) != ch["sha"]:
                     raise CheckpointError(f"checksum mismatch on {ch['lfn']}")
                 parts.append(data)

@@ -37,7 +37,16 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Protocol, Seque
 
 from .bandwidth import TransferMonitor
 from .catalog import PhysicalFile, ReplicaCatalog
-from .classads import ClassAd, parse as parse_expr
+from .classads import (
+    AttrRef,
+    BinOp,
+    ClassAd,
+    Expr,
+    FuncCall,
+    Ternary,
+    UnaryOp,
+    parse as parse_expr,
+)
 from .gris import Clock, StorageGRIS
 from .ldif import Entry, entry_to_classad
 from .matchmaker import Matchmaker, MatchResult
@@ -54,6 +63,52 @@ __all__ = [
     "default_read_request",
     "default_write_request",
 ]
+
+
+def _referenced_attrs(expr: Optional[Expr]) -> set:
+    """Lower-cased attribute names referenced anywhere in an expression."""
+    out: set = set()
+
+    def walk(e):
+        if e is None:
+            return
+        if isinstance(e, AttrRef):
+            out.add(e.name.lower())
+        elif isinstance(e, UnaryOp):
+            walk(e.operand)
+        elif isinstance(e, BinOp):
+            walk(e.left)
+            walk(e.right)
+        elif isinstance(e, Ternary):
+            walk(e.cond)
+            walk(e.then)
+            walk(e.other)
+        elif isinstance(e, FuncCall):
+            for a in e.args:
+                walk(a)
+
+    walk(expr)
+    return out
+
+
+#: attributes the Search Phase attaches per (lfn, replica) — present in a
+#: sequential select's view but NOT in the shared endpoint snapshot, so a
+#: request referencing them must take the per-request interpreter path.
+_PER_REPLICA_ATTRS = frozenset({"replicapath", "replicasize"})
+
+
+@dataclass
+class _SnapshotState:
+    """The broker's cached view of one published GRIS epoch: tensor
+    snapshot + per-row ads, shared by every selection until it expires."""
+
+    snapshot: Any  # core.snapshot.ReplicaSnapshot
+    endpoints: Tuple[str, ...]  # row order
+    row_of: Dict[str, int]  # endpoint url → row
+    entries: List[Entry]
+    ads: List[ClassAd]
+    table: Any  # core.compile.ColumnTable (f64, live rows)
+    built_at: float
 
 
 class BrokerError(RuntimeError):
@@ -215,6 +270,9 @@ class DataBroker:
         straggler_factor: float = 0.35,
         straggler_patience: int = 3,
         max_attempts: int = 4,
+        snapshot_ttl: float = 5.0,
+        batch_use_kernel: bool = False,
+        plan_cache_size: int = 256,
     ):
         self.client_url = client_url
         self.catalog = catalog
@@ -227,6 +285,13 @@ class DataBroker:
         self.straggler_factor = straggler_factor
         self.straggler_patience = straggler_patience
         self.max_attempts = max_attempts
+        # batched-selection state: snapshot TTL mirrors the GRIS dynamic-
+        # attribute TTL (stale columns would diverge from fresh LDAP reads)
+        self.snapshot_ttl = snapshot_ttl
+        self.batch_use_kernel = batch_use_kernel
+        self._plan_cache = None  # lazily built (pulls in core.plancache)
+        self._plan_cache_size = plan_cache_size
+        self._snap_state: Optional[_SnapshotState] = None
         # local (client-side) observation history: end-to-end from OUR side
         self.local_monitor = TransferMonitor(None)
         # counters
@@ -237,7 +302,21 @@ class DataBroker:
             "failovers": 0,
             "straggler_switches": 0,
             "vectorized_matches": 0,
+            "batch_selects": 0,
+            "batched_kernel_requests": 0,
+            "batched_columnar_requests": 0,
+            "batched_interp_requests": 0,
+            "snapshot_builds": 0,
+            "snapshot_reuses": 0,
         }
+
+    @property
+    def plan_cache(self):
+        if self._plan_cache is None:
+            from .plancache import PlanCache
+
+            self._plan_cache = PlanCache(self._plan_cache_size)
+        return self._plan_cache
 
     # ------------------------------------------------------------------ Search
     def search(self, lfn: str, attrs: Optional[Sequence[str]] = None) -> List[ReplicaView]:
@@ -299,6 +378,285 @@ class DataBroker:
             raise NoMatchError(lfn)
         return ranked[:top_k] if top_k else ranked
 
+    # --------------------------------------------------------- Batched Match
+    def _snapshot_state(self, endpoints: Sequence[str]) -> _SnapshotState:
+        """The cached snapshot of the published GRIS epoch, rebuilt when
+        the TTL lapses or a new endpoint appears (the 'epoch' boundary)."""
+        want = [ep for ep in endpoints if self.gris_resolver(ep) is not None]
+        now = self.clock.now()
+        st = self._snap_state
+        if (
+            st is not None
+            and now - st.built_at < self.snapshot_ttl
+            and all(ep in st.row_of for ep in want)
+        ):
+            self.stats["snapshot_reuses"] += 1
+            return st
+
+        from .snapshot import ReplicaSnapshot
+
+        # keep previously known endpoints resident so the snapshot grows
+        # monotonically within a broker's lifetime (stable row space)
+        known: List[str] = list(st.endpoints) if st is not None else []
+        for ep in want:
+            if st is None or ep not in st.row_of:
+                known.append(ep)
+        rows: List[str] = []
+        entries: List[Entry] = []
+        ads: List[ClassAd] = []
+        for ep in known:
+            gris = self.gris_resolver(ep)
+            if gris is None:
+                continue  # endpoint died: drop its row this epoch
+            entry = gris.flattened_view(source=self.client_url)
+            entry.setdefault("endpoint", ep)
+            rows.append(ep)
+            entries.append(entry)
+            ads.append(entry_to_classad(entry))
+        prev = st.snapshot if st is not None else None
+        snapshot = (
+            prev.new_epoch(entries, reuse_vocab=False)
+            if prev is not None
+            else ReplicaSnapshot(entries)
+        )
+        st = _SnapshotState(
+            snapshot=snapshot,
+            endpoints=tuple(rows),
+            row_of={ep: i for i, ep in enumerate(rows)},
+            entries=entries,
+            ads=ads,
+            table=snapshot.table(),
+            built_at=now,
+        )
+        self._snap_state = st
+        self.stats["snapshot_builds"] += 1
+        return st
+
+    def invalidate_snapshot(self) -> None:
+        self._snap_state = None
+
+    def select_many(
+        self,
+        queries: Sequence[Tuple[str, Optional[ClassAd]]],
+        *,
+        top_k: Optional[int] = None,
+        use_kernel: Optional[bool] = None,
+        strict: bool = True,
+    ) -> List[Any]:
+        """Batched Search+Match: many ``(lfn, request)`` selections against
+        ONE device-resident snapshot in (at most) one kernel launch.
+
+        Requests whose plans lower to the kernel subset are stacked into a
+        single ``matchrank_batched`` call; requests that only compile to
+        the columnar subset run per-request against the same snapshot
+        table; everything else takes the paper-faithful interpreter — all
+        three tiers produce identical selections (tested).
+
+        Returns one ranked list per query, in query order. With
+        ``strict=False``, a query that fails (no replicas / no match)
+        yields its exception object in place of a list instead of raising
+        — the coalescing scheduler path, where one bad request must not
+        poison the batch.
+        """
+        use_kernel = self.batch_use_kernel if use_kernel is None else use_kernel
+        self.stats["batch_selects"] += 1
+        n = len(queries)
+        results: List[Any] = [None] * n
+
+        # ---- Search: one catalog+GRIS sweep for the whole batch ----
+        reqs: List[Optional[ClassAd]] = [None] * n
+        replica_lists: List[Optional[List[PhysicalFile]]] = [None] * n
+        all_endpoints: List[str] = []
+        seen = set()
+        from .catalog import CatalogError
+
+        for i, (lfn, req) in enumerate(queries):
+            reqs[i] = req if req is not None else default_read_request(self.client_url)
+            try:
+                replicas = self.catalog.lookup(lfn)
+            except CatalogError:
+                replicas = None
+            if not replicas:
+                results[i] = NoReplicaError(lfn)
+                continue
+            replica_lists[i] = replicas
+            for pfn in replicas:
+                if pfn.endpoint not in seen:
+                    seen.add(pfn.endpoint)
+                    all_endpoints.append(pfn.endpoint)
+        self.stats["searches"] += 1
+        if not all_endpoints:
+            if strict:
+                raise NoReplicaError(queries[0][0] if queries else "<empty batch>")
+            return results
+        st = self._snapshot_state(all_endpoints)
+        if st.snapshot.n == 0:  # every endpoint unreachable
+            for i in range(n):
+                if results[i] is None:
+                    results[i] = NoReplicaError(f"{queries[i][0]}: no reachable replicas")
+            if strict:
+                raise next(r for r in results if isinstance(r, BrokerError))
+            return results
+        vocab = st.snapshot.vocab_key()
+
+        # ---- per-request lowering through the plan cache (tiered) ----
+        from .compile import CompileError
+
+        kernel_batch: List[int] = []  # query indices in the stacked launch
+        kernel_plans: List[Any] = []
+        columnar: List[int] = []
+        interp: List[int] = []
+        policy_cache: Dict[Tuple[str, int], Any] = {}
+
+        def policy_pass(i: int) -> Optional[List[float]]:
+            """Fold every row's server policy into a [rows] admit vector
+            for request i; None ⇒ some policy is outside the columnar
+            subset and request i must go to the interpreter."""
+            import numpy as np
+
+            admit = np.ones((st.snapshot.n,), dtype=np.float32)
+            groups: Dict[str, List[int]] = {}
+            for r, ad in enumerate(st.ads):
+                pexpr = ad.lookup_expr("requirements")
+                if pexpr is None:
+                    continue
+                groups.setdefault(repr(pexpr), []).append(r)
+            for src, rows in groups.items():
+                try:
+                    fn = self.plan_cache.policy_fn(src, reqs[i], vocab, env=self.env)
+                except CompileError:
+                    return None
+                t = fn(st.table, np)
+                ok = t.ok if t.ok is not True else np.ones((st.snapshot.n,), bool)
+                pol = np.broadcast_to(np.asarray(t.val), (st.snapshot.n,)) & np.broadcast_to(
+                    np.asarray(ok), (st.snapshot.n,)
+                )
+                for r in rows:
+                    if not pol[r]:
+                        admit[r] = 0.0
+            return admit
+
+        import numpy as np
+
+        admits: Dict[int, np.ndarray] = {}
+        for i in range(n):
+            if results[i] is not None:
+                continue
+            req = reqs[i]
+            refs = _referenced_attrs(req.lookup_expr("requirements")) | _referenced_attrs(
+                req.lookup_expr("rank")
+            )
+            if refs & _PER_REPLICA_ATTRS:
+                interp.append(i)  # needs per-(lfn,replica) attrs, not in snapshot
+                continue
+            admit = policy_pass(i)
+            if admit is None:
+                interp.append(i)
+                continue
+            admits[i] = admit
+            try:
+                plan = self.plan_cache.kernel_plan(req, vocab, env=self.env)
+                kernel_batch.append(i)
+                kernel_plans.append(plan)
+                continue
+            except CompileError:
+                pass
+            try:
+                self.plan_cache.columnar_program(req, vocab, env=self.env)
+                columnar.append(i)
+            except CompileError:
+                interp.append(i)
+
+        # ---- tier 1: one stacked kernel launch for the whole sub-batch ----
+        if kernel_batch:
+            from repro.kernels.matchrank.ops import matchrank_batched, stack_plans
+
+            attrs, valid, n_rows = st.snapshot.device_columns()
+            admit_mat = np.zeros((len(kernel_batch), n_rows), dtype=np.float32)
+            for bi, i in enumerate(kernel_batch):
+                row_ok = admits[i]
+                for pfn in replica_lists[i]:
+                    r = st.row_of.get(pfn.endpoint)
+                    if r is not None and row_ok[r] > 0:
+                        admit_mat[bi, r] = 1.0
+            mask, score, _, _ = matchrank_batched(
+                attrs,
+                valid,
+                stack_plans(kernel_plans),
+                admit=admit_mat,
+                n_rows=n_rows,
+                use_kernel=use_kernel,
+            )
+            for bi, i in enumerate(kernel_batch):
+                results[i] = self._ranked_from_scores(
+                    queries[i][0], replica_lists[i], st, mask[bi], score[bi]
+                )
+                self.stats["batched_kernel_requests"] += 1
+
+        # ---- tier 2: columnar programs over the shared snapshot table ----
+        for i in columnar:
+            prog = self.plan_cache.columnar_program(reqs[i], vocab, env=self.env)
+            mask, rank = prog.run(st.table, np)
+            mask = np.asarray(mask, bool) & (admits[i] > 0)
+            row_admit = np.zeros((st.snapshot.n,), bool)
+            for pfn in replica_lists[i]:
+                r = st.row_of.get(pfn.endpoint)
+                if r is not None:
+                    row_admit[r] = True
+            mask &= row_admit
+            results[i] = self._ranked_from_scores(
+                queries[i][0], replica_lists[i], st, mask, np.asarray(rank, np.float64)
+            )
+            self.stats["batched_columnar_requests"] += 1
+
+        # ---- tier 3: the paper-faithful interpreter, per request ----
+        for i in interp:
+            try:
+                results[i] = self.select(queries[i][0], reqs[i])
+            except BrokerError as e:
+                results[i] = e
+            self.stats["batched_interp_requests"] += 1
+
+        # ---- finalize ----
+        for i in range(n):
+            r = results[i]
+            if isinstance(r, list) and not r:
+                results[i] = NoMatchError(queries[i][0])
+        if strict:
+            for r in results:
+                if isinstance(r, BrokerError):
+                    raise r
+        if top_k:
+            results = [r[:top_k] if isinstance(r, list) else r for r in results]
+        return results
+
+    def _ranked_from_scores(
+        self, lfn: str, replicas: Sequence[PhysicalFile], st: _SnapshotState, mask, score
+    ) -> List[RankedReplica]:
+        """Snapshot rows + per-request scores → the same rank-ordered
+        RankedReplica list the interpreter produces (same tiebreak)."""
+        by_row: Dict[int, PhysicalFile] = {}
+        for pfn in replicas:
+            r = st.row_of.get(pfn.endpoint)
+            if r is not None:
+                by_row.setdefault(r, pfn)
+
+        def name_of(r: int) -> str:
+            e = st.entries[r]
+            for attr in ("name", "hostname", "endpoint", "url"):
+                for k, v in e.items():
+                    if k.lower() == attr and isinstance(v, str):
+                        return v
+            return f"resource-{r}"
+
+        rows = [r for r in by_row if bool(mask[r])]
+        rows.sort(key=lambda r: (-float(score[r]), name_of(r), r))
+        out = []
+        for r in rows:
+            view = ReplicaView(by_row[r], st.entries[r], st.ads[r])
+            out.append(RankedReplica(view, float(score[r])))
+        return out
+
     # ------------------------------------------------------------------ Access
     def fetch(
         self,
@@ -308,7 +666,20 @@ class DataBroker:
         *,
         monitor_stragglers: bool = True,
     ) -> FetchOutcome:
-        """Access Phase with failover and straggler mitigation.
+        """Search+Match+Access in one call (the paper's full loop)."""
+        ranked = self.select(lfn, request)
+        return self.access(lfn, ranked, transfer, monitor_stragglers=monitor_stragglers)
+
+    def access(
+        self,
+        lfn: str,
+        ranked: List[RankedReplica],
+        transfer: TransferService,
+        *,
+        monitor_stragglers: bool = True,
+    ) -> FetchOutcome:
+        """Access Phase with failover and straggler mitigation, over a
+        pre-computed ranked list (e.g. from a batched ``select_many``).
 
         Walks the ranked list; a failed endpoint advances to the next
         (failover); a transfer whose observed chunk bandwidth stays below
@@ -317,7 +688,8 @@ class DataBroker:
         """
         from repro.storage.transfer import TransferFailure  # cycle-free at runtime
 
-        ranked = self.select(lfn, request)
+        if not ranked:
+            raise NoMatchError(lfn)
         self.stats["fetches"] += 1
         attempts = 0
         switched = 0

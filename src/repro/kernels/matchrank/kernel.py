@@ -31,6 +31,8 @@ from jax.experimental import pallas as pl
 
 NEG_INF = float("-inf")
 
+__all__ = ["matchrank_pallas", "matchrank_batched_pallas"]
+
 
 def _matchrank_kernel(
     # inputs (VMEM tiles)
@@ -177,3 +179,173 @@ def matchrank_pallas(
         interpret=interpret,
     )(attrs, valid, admit, sel, op_codes, thresholds, term_active, weights, bias)
     return mask > 0.5, score, best_s, best_i
+
+
+def _matchrank_batched_kernel(
+    # inputs (VMEM tiles)
+    attrs_ref,  # [BLOCK_S, A_PAD] f32 (shared across the batch)
+    valid_ref,  # [BLOCK_S, A_PAD] f32
+    admit_ref,  # [1, BLOCK_S] f32 (request b's pre-mask slice)
+    sel_ref,  # [1, T_PAD, A_PAD] f32
+    ops_ref,  # [1, T_PAD] i32
+    th_ref,  # [1, T_PAD] f32
+    act_ref,  # [1, T_PAD] f32
+    w_ref,  # [1, A_PAD] f32
+    bias_ref,  # [1] f32
+    # outputs
+    mask_ref,  # [1, BLOCK_S] f32
+    score_ref,  # [1, BLOCK_S] f32
+    topk_score_ref,  # [1, K] f32
+    topk_idx_ref,  # [1, K] i32
+    # scratch (SMEM carries across the S-block grid steps of request b)
+    carry_score_ref,  # [K] f32
+    carry_idx_ref,  # [K] i32
+    *,
+    block_s: int,
+    k: int,
+):
+    si = pl.program_id(1)  # S-block index (innermost: sequential per request)
+    nblocks = pl.num_programs(1)
+
+    attrs = attrs_ref[...]
+    validf = valid_ref[...]
+
+    # ---- per-term values for THIS request: one-hot matmul on the MXU ----
+    sel_t = sel_ref[0].T  # [A_PAD, T_PAD]
+    vals = jnp.dot(attrs, sel_t, preferred_element_type=jnp.float32)  # [S, T]
+    vok = jnp.dot(validf, sel_t, preferred_element_type=jnp.float32) > 0.5
+
+    th = th_ref[0][None, :]
+    opc = ops_ref[0][None, :]
+    r = jnp.where(opc == 0, vals < th, False)
+    r = jnp.where(opc == 1, vals <= th, r)
+    r = jnp.where(opc == 2, vals > th, r)
+    r = jnp.where(opc == 3, vals >= th, r)
+    r = jnp.where(opc == 4, vals == th, r)
+    r = jnp.where(opc == 5, vals != th, r)
+
+    act = act_ref[0][None, :] > 0.5
+    term_pass = jnp.where(act, jnp.logical_and(r, vok), True)
+    mask = jnp.all(term_pass, axis=-1)  # [S]
+    mask = jnp.logical_and(mask, admit_ref[0] > 0.5)
+
+    # ---- linear rank with validity gating ----
+    w = w_ref[0]
+    score_raw = jnp.dot(attrs, w, preferred_element_type=jnp.float32) + bias_ref[0]
+    wactive = (jnp.abs(w) > 0).astype(jnp.float32)
+    bad = jnp.dot(1.0 - validf, wactive, preferred_element_type=jnp.float32)
+    rank = jnp.where(bad > 0, 0.0, score_raw)
+
+    score = jnp.where(mask, rank, NEG_INF)
+    mask_ref[0, :] = mask.astype(jnp.float32)
+    score_ref[0, :] = score
+
+    # ---- fused per-request top-k carry across S-blocks ----
+    # The carry holds the best k (score, global index) seen so far for
+    # request b, sorted descending. Merge = k knockout-argmax rounds over
+    # [carry ++ this block]; carry entries come first, so on score ties the
+    # earlier block (lower global index) wins — interpreter tiebreak.
+    @pl.when(si == 0)
+    def _init():
+        for j in range(k):
+            carry_score_ref[j] = NEG_INF
+            carry_idx_ref[j] = jnp.int32(0)
+
+    global_idx = (si * block_s + jnp.arange(block_s)).astype(jnp.int32)
+    ext_scores = jnp.concatenate([carry_score_ref[...], score])
+    ext_idx = jnp.concatenate([carry_idx_ref[...], global_idx])
+    positions = jnp.arange(k + block_s)
+    new_scores = []
+    new_idx = []
+    for _ in range(k):
+        j = jnp.argmax(ext_scores)  # first max ⇒ lowest index on ties
+        new_scores.append(ext_scores[j])
+        new_idx.append(ext_idx[j])
+        ext_scores = jnp.where(positions == j, NEG_INF, ext_scores)
+    for j in range(k):
+        carry_score_ref[j] = new_scores[j]
+        carry_idx_ref[j] = new_idx[j]
+
+    @pl.when(si == nblocks - 1)
+    def _publish():
+        for j in range(k):
+            topk_score_ref[0, j] = carry_score_ref[j]
+            topk_idx_ref[0, j] = carry_idx_ref[j]
+
+
+def matchrank_batched_pallas(
+    attrs: jnp.ndarray,  # [S, A_PAD] f32 (S % block_s == 0, A_PAD % 128 == 0)
+    valid: jnp.ndarray,  # [S, A_PAD] f32
+    admit: jnp.ndarray,  # [B, S] f32 — per-request pre-mask
+    sel: jnp.ndarray,  # [B, T_PAD, A_PAD] f32
+    op_codes: jnp.ndarray,  # [B, T_PAD] i32
+    thresholds: jnp.ndarray,  # [B, T_PAD] f32
+    term_active: jnp.ndarray,  # [B, T_PAD] f32
+    weights: jnp.ndarray,  # [B, A_PAD] f32
+    bias: jnp.ndarray,  # [B] f32
+    *,
+    block_s: int = 512,
+    k: int = 1,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-request fused match+rank+top-k over ONE candidate block.
+
+    Grid is ``(B, S//block_s)`` with the candidate axis innermost, so the
+    shared ``attrs``/``valid`` tiles stream once per request while each
+    request's small plan tensors stay resident. The per-request top-k is
+    carried across S-blocks in SMEM and published on the last block —
+    still a single pass over HBM per request.
+
+    Returns (mask [B,S] bool, score [B,S] f32, topk_scores [B,k] f32,
+    topk_idx [B,k] i32).
+    """
+    s, a_pad = attrs.shape
+    b, t_pad, a_pad2 = sel.shape
+    assert a_pad == a_pad2, (a_pad, a_pad2)
+    assert s % block_s == 0, (s, block_s)
+    assert admit.shape == (b, s), (admit.shape, b, s)
+    nblocks = s // block_s
+
+    kernel = functools.partial(_matchrank_batched_kernel, block_s=block_s, k=k)
+    grid = (b, nblocks)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, s), jnp.float32),  # mask
+        jax.ShapeDtypeStruct((b, s), jnp.float32),  # score
+        jax.ShapeDtypeStruct((b, k), jnp.float32),  # top-k scores
+        jax.ShapeDtypeStruct((b, k), jnp.int32),  # top-k indices
+    )
+    in_specs = [
+        pl.BlockSpec((block_s, a_pad), lambda bi, si: (si, 0)),  # attrs (shared)
+        pl.BlockSpec((block_s, a_pad), lambda bi, si: (si, 0)),  # valid (shared)
+        pl.BlockSpec((1, block_s), lambda bi, si: (bi, si)),  # admit
+        pl.BlockSpec((1, t_pad, a_pad), lambda bi, si: (bi, 0, 0)),  # sel
+        pl.BlockSpec((1, t_pad), lambda bi, si: (bi, 0)),  # ops
+        pl.BlockSpec((1, t_pad), lambda bi, si: (bi, 0)),  # thresholds
+        pl.BlockSpec((1, t_pad), lambda bi, si: (bi, 0)),  # active
+        pl.BlockSpec((1, a_pad), lambda bi, si: (bi, 0)),  # weights
+        pl.BlockSpec((1,), lambda bi, si: (bi,)),  # bias
+    ]
+    out_specs = (
+        pl.BlockSpec((1, block_s), lambda bi, si: (bi, si)),
+        pl.BlockSpec((1, block_s), lambda bi, si: (bi, si)),
+        pl.BlockSpec((1, k), lambda bi, si: (bi, 0)),
+        pl.BlockSpec((1, k), lambda bi, si: (bi, 0)),
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    scratch_shapes = [
+        pltpu.SMEM((k,), jnp.float32),
+        pltpu.SMEM((k,), jnp.int32),
+    ]
+
+    mask, score, topk_s, topk_i = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(attrs, valid, admit, sel, op_codes, thresholds, term_active, weights, bias)
+    return mask > 0.5, score, topk_s, topk_i

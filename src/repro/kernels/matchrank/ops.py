@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +26,20 @@ from repro.core.compile import (
     extract_linear_rank,
 )
 
-from .kernel import matchrank_pallas
-from .ref import matchrank_ref
+from .kernel import matchrank_batched_pallas, matchrank_pallas
+from .ref import matchrank_batched_ref, matchrank_ref
 
-__all__ = ["KernelPlan", "lower_request", "matchrank", "matchrank_topk", "pad_columns"]
+__all__ = [
+    "KernelPlan",
+    "BatchedPlan",
+    "lower_request",
+    "stack_plans",
+    "matchrank",
+    "matchrank_topk",
+    "matchrank_batched",
+    "matchrank_batched_topk",
+    "pad_columns",
+]
 
 
 def _pad_to(x: np.ndarray, n: int, axis: int = 0, fill=0.0) -> np.ndarray:
@@ -131,6 +141,58 @@ def lower_request(
     )
 
 
+@dataclass
+class BatchedPlan:
+    """B stacked :class:`KernelPlan`\\ s over one shared attribute
+    vocabulary, padded to a common T_PAD — the operand set of the
+    multi-request kernel."""
+
+    attr_names: List[str]
+    sel: np.ndarray  # [B, T_PAD, A_PAD]
+    op_codes: np.ndarray  # [B, T_PAD] i32
+    thresholds: np.ndarray  # [B, T_PAD] f32
+    term_active: np.ndarray  # [B, T_PAD] f32
+    weights: np.ndarray  # [B, A_PAD] f32
+    bias: np.ndarray  # [B] f32
+    a_pad: int
+    t_pad: int
+
+    @property
+    def b(self) -> int:
+        return self.sel.shape[0]
+
+
+def stack_plans(plans: Sequence[KernelPlan]) -> BatchedPlan:
+    """Stack per-request plans into one batched operand set.
+
+    All plans must share the attribute vocabulary (they were lowered
+    against the same snapshot); T_PAD is re-padded to the batch maximum
+    (padded terms are inactive, so semantics are unchanged).
+    """
+    if not plans:
+        raise ValueError("stack_plans needs at least one plan")
+    first = plans[0]
+    for p in plans[1:]:
+        if p.attr_names != first.attr_names or p.a_pad != first.a_pad:
+            raise ValueError("stacked plans must share an attribute vocabulary")
+    t_pad = max(p.t_pad for p in plans)
+
+    def pt(x, fill=0.0):
+        return _pad_to(x, t_pad, axis=0, fill=fill)
+
+    return BatchedPlan(
+        attr_names=list(first.attr_names),
+        sel=np.stack([pt(p.sel) for p in plans]),
+        op_codes=np.stack([pt(p.op_codes) for p in plans]),
+        thresholds=np.stack([pt(p.thresholds) for p in plans]),
+        term_active=np.stack([pt(p.term_active) for p in plans]),
+        weights=np.stack([p.weights for p in plans]),
+        bias=np.concatenate([p.bias for p in plans]),
+        a_pad=first.a_pad,
+        t_pad=t_pad,
+    )
+
+
 def pad_columns(
     attrs: np.ndarray, valid: np.ndarray, a_pad: int, block_s: int = 512
 ) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -159,29 +221,92 @@ def _dispatch(
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_s", "use_kernel", "interpret")
+)
+def _dispatch_topk(
+    attrs, valid, admit, sel, op_codes, thresholds, term_active, weights, bias,
+    *, k: int, block_s: int, use_kernel: bool, interpret: bool,
+):
+    """Fused scores + top-k in one jitted program — no host round-trip."""
+    mask, score, _, _ = _dispatch(
+        attrs, valid, admit, sel, op_codes, thresholds, term_active, weights,
+        bias, block_s=block_s, use_kernel=use_kernel, interpret=interpret,
+    )
+    vals, idx = jax.lax.top_k(score, k)
+    return vals, idx
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_s", "use_kernel", "interpret")
+)
+def _dispatch_batched(
+    attrs, valid, admit, sel, op_codes, thresholds, term_active, weights, bias,
+    *, k: int, block_s: int, use_kernel: bool, interpret: bool,
+):
+    if use_kernel:
+        return matchrank_batched_pallas(
+            attrs, valid, admit, sel, op_codes, thresholds, term_active,
+            weights, bias, block_s=block_s, k=k, interpret=interpret,
+        )
+    return matchrank_batched_ref(
+        attrs, valid, admit, sel, op_codes, thresholds, term_active, weights,
+        bias, k=k,
+    )
+
+
+def _is_prepadded(attrs, a_pad: int, block_s: int) -> bool:
+    """True when the candidate block is already device-padded (snapshot
+    path): lane-aligned columns, block-aligned rows."""
+    s, a = attrs.shape
+    return a == a_pad and s > 0 and s % block_s == 0
+
+
+def _prepare_columns(
+    attrs, valid, a_pad: int, block_s: int, n_rows: Optional[int]
+) -> Tuple[Any, Any, int, int]:
+    """→ (attrs_p, valid_p, s, s_pad). Skips the host pad entirely when the
+    inputs are already padded (e.g. held resident by a ReplicaSnapshot)."""
+    if _is_prepadded(attrs, a_pad, block_s):
+        s_pad = attrs.shape[0]
+        s = int(n_rows) if n_rows is not None else s_pad
+        return attrs, valid, s, s_pad
+    s = attrs.shape[0] if n_rows is None else int(n_rows)
+    attrs_p, valid_p, s_pad = pad_columns(
+        np.asarray(attrs), np.asarray(valid), a_pad, block_s
+    )
+    return jnp.asarray(attrs_p), jnp.asarray(valid_p), s, s_pad
+
+
 def matchrank(
-    attrs: np.ndarray,  # [S, A] f32 (unpadded)
+    attrs: np.ndarray,  # [S, A] f32 (unpadded, or pre-padded [S_PAD, A_PAD])
     valid: np.ndarray,  # [S, A] bool/f32
     plan: KernelPlan,
     *,
     admit: Optional[np.ndarray] = None,  # [S] pre-mask (folded policies)
+    n_rows: Optional[int] = None,  # real row count when pre-padded
     block_s: int = 512,
     use_kernel: bool = True,
     interpret: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray, float, int]:
     """Run the fused match+rank+top-1. Returns (mask[S], score[S],
-    best_score, best_idx) trimmed back to the unpadded S."""
-    s = attrs.shape[0]
-    attrs_p, valid_p, s_pad = pad_columns(attrs, valid, plan.a_pad, block_s)
+    best_score, best_idx) trimmed back to the unpadded S.
+
+    Pre-padded device-resident inputs (``attrs.shape == [S_PAD, A_PAD]``
+    with ``S_PAD % block_s == 0``) skip the host-side ``pad_columns`` +
+    transfer — pass ``n_rows`` for the live row count.
+    """
+    attrs_p, valid_p, s, s_pad = _prepare_columns(
+        attrs, valid, plan.a_pad, block_s, n_rows
+    )
+    admit_p = np.zeros((s_pad,), dtype=np.float32)
     if admit is None:
-        admit_p = np.zeros((s_pad,), dtype=np.float32)
         admit_p[:s] = 1.0
     else:
-        admit_p = np.zeros((s_pad,), dtype=np.float32)
-        admit_p[:s] = np.asarray(admit, dtype=np.float32)
+        admit_p[:s] = np.asarray(admit, dtype=np.float32)[:s]
 
     mask, score, best_s, best_i = _dispatch(
-        jnp.asarray(attrs_p), jnp.asarray(valid_p), jnp.asarray(admit_p),
+        attrs_p, valid_p, jnp.asarray(admit_p),
         jnp.asarray(plan.sel), jnp.asarray(plan.op_codes),
         jnp.asarray(plan.thresholds), jnp.asarray(plan.term_active),
         jnp.asarray(plan.weights), jnp.asarray(plan.bias),
@@ -200,11 +325,131 @@ def matchrank_topk(
     valid: np.ndarray,
     plan: KernelPlan,
     k: int,
-    **kw,
+    *,
+    admit: Optional[np.ndarray] = None,
+    n_rows: Optional[int] = None,
+    block_s: int = 512,
+    use_kernel: bool = True,
+    interpret: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Top-k selection: fused kernel scores + lax.top_k. Returns
+    """Top-k selection: fused scores + ``lax.top_k`` inside ONE jitted
+    program (scores never leave the device before the top-k). Returns
     (indices[k], scores[k]); unmatched slots have score -inf."""
-    mask, score, _, _ = matchrank(attrs, valid, plan, **kw)
-    s = jnp.asarray(score)
-    vals, idx = jax.lax.top_k(s, min(k, s.shape[0]))
+    attrs_p, valid_p, s, s_pad = _prepare_columns(
+        attrs, valid, plan.a_pad, block_s, n_rows
+    )
+    admit_p = np.zeros((s_pad,), dtype=np.float32)
+    if admit is None:
+        admit_p[:s] = 1.0
+    else:
+        admit_p[:s] = np.asarray(admit, dtype=np.float32)[:s]
+
+    vals, idx = _dispatch_topk(
+        attrs_p, valid_p, jnp.asarray(admit_p),
+        jnp.asarray(plan.sel), jnp.asarray(plan.op_codes),
+        jnp.asarray(plan.thresholds), jnp.asarray(plan.term_active),
+        jnp.asarray(plan.weights), jnp.asarray(plan.bias),
+        k=min(k, s), block_s=block_s, use_kernel=use_kernel,
+        interpret=interpret,
+    )
     return np.asarray(idx), np.asarray(vals)
+
+
+def matchrank_batched(
+    attrs: np.ndarray,  # [S, A] (unpadded) or pre-padded [S_PAD, A_PAD]
+    valid: np.ndarray,
+    plans: "BatchedPlan | Sequence[KernelPlan]",
+    *,
+    admit: Optional[np.ndarray] = None,  # [B, S] per-request pre-mask
+    n_rows: Optional[int] = None,
+    k: int = 1,
+    block_s: int = 512,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batched fused match+rank+top-k: B requests against ONE candidate
+    block in a single kernel launch.
+
+    Returns (mask [B,S] bool, score [B,S] f32, topk_idx [B,k] i32,
+    topk_scores [B,k] f32), trimmed to the live row count. Top-k slots
+    beyond a request's match count hold score -inf (index is meaningless
+    there, as in :func:`matchrank_topk`).
+    """
+    batched = plans if isinstance(plans, BatchedPlan) else stack_plans(list(plans))
+    b = batched.b
+    attrs_p, valid_p, s, s_pad = _prepare_columns(
+        attrs, valid, batched.a_pad, block_s, n_rows
+    )
+    admit_p = np.zeros((b, s_pad), dtype=np.float32)
+    if admit is None:
+        admit_p[:, :s] = 1.0
+    else:
+        admit_p[:, :s] = np.asarray(admit, dtype=np.float32)[:, :s]
+
+    mask, score, topk_s, topk_i = _dispatch_batched(
+        attrs_p, valid_p, jnp.asarray(admit_p),
+        jnp.asarray(batched.sel), jnp.asarray(batched.op_codes),
+        jnp.asarray(batched.thresholds), jnp.asarray(batched.term_active),
+        jnp.asarray(batched.weights), jnp.asarray(batched.bias),
+        k=min(k, s), block_s=block_s, use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    return (
+        np.asarray(mask)[:, :s],
+        np.asarray(score)[:, :s],
+        np.asarray(topk_i),
+        np.asarray(topk_s),
+    )
+
+
+def matchrank_batched_topk(
+    attrs: np.ndarray,  # [S, A] (unpadded) or pre-padded [S_PAD, A_PAD]
+    valid: np.ndarray,
+    plans: Sequence[KernelPlan],
+    *,
+    k: int = 1,
+    admit: Optional[np.ndarray] = None,  # [B, S] per-request pre-mask
+    n_rows: Optional[int] = None,
+    rank_order=None,  # Callable[[weights], (order, svals)] — snapshot cache
+    use_sparse: Optional[bool] = None,
+    block_s: int = 512,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched top-k *selection*: B requests → (topk_idx [B,k],
+    topk_scores [B,k]); slots past a request's match count hold -inf
+    (and index -1 on the sparse path).
+
+    The steady-state CPU fast path answers each request by scanning
+    candidates in precomputed rank-descending order until k pass its
+    interval-canonicalized requirements (expected probes ≈ k/selectivity
+    — see :mod:`.sparse`); plans outside the interval subset, or
+    ``use_sparse=False``, fall back to the dense batched launch. Pass a
+    :meth:`ReplicaSnapshot.rank_order <repro.core.snapshot.ReplicaSnapshot.rank_order>`
+    so the per-(epoch, rank-weights) sort is amortized across calls.
+    """
+    from .sparse import canonicalize_plans, topk_in_rank_order
+
+    plans = list(plans)
+    na = len(plans[0].attr_names)
+    if use_sparse is not False:
+        batch = canonicalize_plans(plans, na)
+        if batch is not None:
+            a_host = np.asarray(attrs, dtype=np.float32)
+            v_host = np.asarray(valid)
+            s = a_host.shape[0] if n_rows is None else int(n_rows)
+            return topk_in_rank_order(
+                a_host[:s, :na],
+                v_host[:s, :na] > 0.5 if v_host.dtype != bool else v_host[:s, :na],
+                batch,
+                k=k,
+                admit=admit,
+                rank_order=rank_order,
+            )
+        if use_sparse:
+            raise CompileError("plan batch not interval-canonicalizable")
+    _, _, ti, ts = matchrank_batched(
+        attrs, valid, plans, admit=admit, n_rows=n_rows, k=k,
+        block_s=block_s, use_kernel=use_kernel, interpret=interpret,
+    )
+    return ti.astype(np.int64), ts

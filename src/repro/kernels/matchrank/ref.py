@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 #: opcode encoding shared with core.compile.OPCODES
@@ -76,3 +77,58 @@ def matchrank_ref(
     best_idx = jnp.argmax(score)  # ties → lowest index
     best_score = score[best_idx]
     return mask, score, best_score[None], best_idx[None].astype(jnp.int32)
+
+
+def matchrank_batched_ref(
+    attrs: jnp.ndarray,  # [S, A] f32 — ONE shared candidate block
+    valid: jnp.ndarray,  # [S, A] bool/f32
+    admit: jnp.ndarray,  # [B, S] bool/f32 — per-request pre-mask
+    sel: jnp.ndarray,  # [B, T, A] f32 one-hot rows
+    op_codes: jnp.ndarray,  # [B, T] i32
+    thresholds: jnp.ndarray,  # [B, T] f32
+    term_active: jnp.ndarray,  # [B, T] bool/f32
+    weights: jnp.ndarray,  # [B, A] f32
+    bias: jnp.ndarray,  # [B] f32
+    *,
+    k: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-request oracle: B stacked plans against one candidate block.
+
+    Same per-request semantics as :func:`matchrank_ref`; the candidate
+    table is shared across the batch (the fleet scenario: one published
+    GRIS snapshot, many concurrent selections). Returns
+    (mask [B,S] bool, score [B,S] f32, topk_scores [B,k], topk_idx [B,k]);
+    top-k slot j beyond the number of matches holds -inf. Ties → lowest
+    candidate index (lax.top_k is index-stable).
+    """
+    attrs = attrs.astype(jnp.float32)
+    validf = valid.astype(jnp.float32)
+
+    # per-(request, term) values: [S,A] x [B,T,A] -> [B,S,T]
+    vals = jnp.einsum("sa,bta->bst", attrs, sel.astype(jnp.float32))
+    vok = jnp.einsum("sa,bta->bst", validf, sel.astype(jnp.float32)) > 0.5
+
+    th = thresholds[:, None, :]  # [B,1,T]
+    opc = op_codes[:, None, :]  # [B,1,T]
+    r = jnp.where(opc == 0, vals < th, False)
+    r = jnp.where(opc == 1, vals <= th, r)
+    r = jnp.where(opc == 2, vals > th, r)
+    r = jnp.where(opc == 3, vals >= th, r)
+    r = jnp.where(opc == 4, vals == th, r)
+    r = jnp.where(opc == 5, vals != th, r)
+
+    act = term_active.astype(bool)[:, None, :]  # [B,1,T]
+    term_pass = jnp.where(act, r & vok, True)
+    mask = jnp.all(term_pass, axis=-1) & admit.astype(bool)  # [B,S]
+
+    # linear rank with validity gating, per request
+    score_raw = jnp.einsum("sa,ba->bs", attrs, weights.astype(jnp.float32))
+    score_raw = score_raw + bias[:, None]
+    wactive = (jnp.abs(weights) > 0).astype(jnp.float32)  # [B,A]
+    bad = jnp.einsum("sa,ba->bs", 1.0 - validf, wactive)
+    rank = jnp.where(bad > 0, 0.0, score_raw)
+
+    score = jnp.where(mask, rank, NEG_INF)  # [B,S]
+    k_eff = min(k, score.shape[-1])
+    topk_scores, topk_idx = jax.lax.top_k(score, k_eff)
+    return mask, score, topk_scores, topk_idx.astype(jnp.int32)

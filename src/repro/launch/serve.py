@@ -49,11 +49,14 @@ def main(argv=None) -> int:
     mgr = CheckpointManager(f"weights-{args.arch}", grid, broker,
                             replication=2, chunk_bytes=1 << 20)
     mgr.save(0, params)
-    params_restored = mgr.restore(0, jax.eval_shape(lambda: params))
+    engine = ServeEngine.from_grid(
+        cfg, mgr, 0, jax.eval_shape(lambda: params),
+        max_seq=args.prompt_len + args.max_new + 8,
+    )
     print(f"weights loaded via broker: {broker.stats['fetches']} fetches, "
-          f"{broker.stats['failovers']} failovers")
-
-    engine = ServeEngine(cfg, params_restored, max_seq=args.prompt_len + args.max_new + 8)
+          f"{broker.stats['failovers']} failovers, "
+          f"{engine.selection_stats['batches']} batched selection launches "
+          f"({engine.selection_stats['coalescing_ratio']:.1f}x coalescing)")
     tok = ByteTokenizer(cfg.vocab_size)
     rng_np = np.random.default_rng(args.seed)
     prompts = rng_np.integers(4, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)

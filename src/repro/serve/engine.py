@@ -6,10 +6,12 @@ A deliberately small but real engine:
   * greedy (or temperature-0-equivalent argmax) lockstep decode with a
     jitted ``decode_step``; finished sequences (EOS / max length) are
     masked and their slots padded,
-  * model weights arrive through the broker (``load_weights_via_grid``):
+  * model weights arrive through the broker (``ServeEngine.from_grid``):
     serving replicas select the best weight-shard source exactly like the
     data pipeline selects dataset shards — the paper's mechanism applied
-    to model distribution at serve time (examples/serve_lm.py).
+    to model distribution at serve time (examples/serve_lm.py). Chunk
+    selections are coalesced through a :class:`BatchScheduler` into
+    batched matchmaking launches instead of per-chunk broker calls.
 """
 
 from __future__ import annotations
@@ -53,6 +55,37 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, c, s: transformer.decode_step(p, t, c, s, cfg)
         )
+        self.selection_stats: Dict[str, Any] = {}
+
+    @classmethod
+    def from_grid(
+        cls,
+        cfg: ArchConfig,
+        manager,  # repro.checkpoint.manager.CheckpointManager
+        step: int,
+        template: Any,
+        *,
+        max_seq: int = 4096,
+        eos_id: int = 2,
+        max_batch: int = 64,
+    ) -> "ServeEngine":
+        """Build an engine whose weights are pulled through the data grid
+        with *coalesced* replica selection: every checkpoint chunk's
+        Search+Match runs through one BatchScheduler → ``select_many`` →
+        batched matchmaking launch, then the Access Phase streams chunks
+        with the usual failover. ``selection_stats`` records the
+        coalescing achieved."""
+        from .scheduler import BatchScheduler
+
+        scheduler = BatchScheduler(manager.broker, max_batch=max_batch)
+        params = manager.restore(step, template, scheduler=scheduler)
+        engine = cls(cfg, params, max_seq=max_seq, eos_id=eos_id)
+        engine.selection_stats = {
+            **scheduler.stats,
+            "coalescing_ratio": scheduler.coalescing_ratio(),
+            "batch_selects": manager.broker.stats["batch_selects"],
+        }
+        return engine
 
     def generate(
         self,

@@ -1,6 +1,7 @@
 """LDIF serialization, LDAP filters, and the LDIF↔ClassAd conversion."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.classads import ClassAd, parse_classad
