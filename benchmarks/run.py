@@ -35,6 +35,19 @@ def main() -> None:
         metavar="PATH",
         help="write rows + checks as JSON (default: BENCH_matchmaking.json)",
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="write the bench results as an obs metrics registry snapshot "
+             "(JSON + Prometheus exposition)",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        metavar="PATH",
+        help="write a Chrome trace (one span per bench module; Perfetto)",
+    )
     args = ap.parse_args()
 
     from . import (
@@ -55,13 +68,17 @@ def main() -> None:
         "kernels": bench_kernels,
     }
 
+    from repro.obs import Tracer
+
+    tracer = Tracer()
     rows = []
     failures = []
     for name, mod in modules.items():
         if args.only and args.only not in name:
             continue
         try:
-            rows.extend(mod.run())
+            with tracer.span(f"bench.{name}"):
+                rows.extend(mod.run())
         except Exception as e:  # pragma: no cover
             failures.append((name, e))
             traceback.print_exc()
@@ -111,6 +128,25 @@ def main() -> None:
             json.dump(payload, f, indent=2)
             f.write("\n")
         print(f"# wrote {args.json}", file=sys.stderr)
+
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+
+        reg = MetricsRegistry(max_label_sets=1024)
+        for name, us, d in rows:
+            reg.gauge("bench_us_per_call", "microseconds per call",
+                      bench=name).set(us)
+            reg.gauge("bench_derived", "bench-specific derived figure",
+                      bench=name).set(d)
+        for c, ok in checks:
+            reg.gauge("bench_check_pass", "1 if the paper-claim check held",
+                      check=c).set(1.0 if ok else 0.0)
+        reg.dump_json(args.metrics_out, extra={"only": args.only})
+        print(f"# wrote {args.metrics_out}", file=sys.stderr)
+
+    if args.trace_out:
+        tracer.dump_json(args.trace_out)
+        print(f"# wrote {args.trace_out}", file=sys.stderr)
 
     if failures or bad:
         sys.exit(1)

@@ -73,7 +73,7 @@ class CheckpointManager:
         self.run_name = run_name
         self.grid = grid
         self.broker = broker
-        self.transfer = grid.transfer_service()
+        self.transfer = grid.transfer_service(metrics=broker.metrics)
         self.replication = replication
         self.chunk_bytes = chunk_bytes
         self.keep = keep

@@ -35,6 +35,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
 
+from repro.obs import AuditTrail, CandidateScore, MetricsRegistry, Tracer
+
 from .bandwidth import TransferMonitor
 from .catalog import PhysicalFile, ReplicaCatalog
 from .classads import (
@@ -109,6 +111,28 @@ class _SnapshotState:
     ads: List[ClassAd]
     table: Any  # core.compile.ColumnTable (f64, live rows)
     built_at: float
+
+
+def _rows_of(
+    replicas: Sequence[PhysicalFile], st: "_SnapshotState"
+) -> Dict[int, PhysicalFile]:
+    """Snapshot row → replica, for the replicas resident in the snapshot."""
+    by_row: Dict[int, PhysicalFile] = {}
+    for pfn in replicas:
+        r = st.row_of.get(pfn.endpoint)
+        if r is not None:
+            by_row.setdefault(r, pfn)
+    return by_row
+
+
+def _row_name(st: "_SnapshotState", r: int) -> str:
+    """The resource name used as the deterministic rank tiebreak."""
+    e = st.entries[r]
+    for attr in ("name", "hostname", "endpoint", "url"):
+        for k, v in e.items():
+            if k.lower() == attr and isinstance(v, str):
+                return v
+    return f"resource-{r}"
 
 
 class BrokerError(RuntimeError):
@@ -272,7 +296,12 @@ class DataBroker:
         max_attempts: int = 4,
         snapshot_ttl: float = 5.0,
         batch_use_kernel: bool = False,
+        batch_use_sparse: bool = False,
         plan_cache_size: int = 256,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
+        audit: Optional[AuditTrail] = None,
+        audit_capacity: int = 1024,
     ):
         self.client_url = client_url
         self.catalog = catalog
@@ -289,39 +318,82 @@ class DataBroker:
         # attribute TTL (stale columns would diverge from fresh LDAP reads)
         self.snapshot_ttl = snapshot_ttl
         self.batch_use_kernel = batch_use_kernel
+        self.batch_use_sparse = batch_use_sparse
         self._plan_cache = None  # lazily built (pulls in core.plancache)
         self._plan_cache_size = plan_cache_size
         self._snap_state: Optional[_SnapshotState] = None
         # local (client-side) observation history: end-to-end from OUR side
         self.local_monitor = TransferMonitor(None)
-        # counters
-        self.stats = {
-            "searches": 0,
-            "matches": 0,
-            "fetches": 0,
-            "failovers": 0,
-            "straggler_switches": 0,
-            "vectorized_matches": 0,
-            "batch_selects": 0,
-            "batched_kernel_requests": 0,
-            "batched_columnar_requests": 0,
-            "batched_interp_requests": 0,
-            "snapshot_builds": 0,
-            "snapshot_reuses": 0,
+        # observability: per-broker registry (decentralized, like the
+        # matchmaker); cooperating components (scheduler, engine) share it
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.audit = audit if audit is not None else AuditTrail(audit_capacity)
+        self.last_request_id: Optional[str] = None
+        self.last_request_ids: List[str] = []
+        # pre-bound counters: the hot path touches these per call, so the
+        # family/child resolution happens once here
+        self._ctr = {
+            name: self.metrics.counter(f"broker_{name}_total", help)
+            for name, help in (
+                ("searches", "Search Phase sweeps (catalog + GRIS)"),
+                ("matches", "Match Phase runs"),
+                ("fetches", "Access Phase fetches"),
+                ("failovers", "dead/refused endpoints skipped to next rank"),
+                ("straggler_switches", "mid-transfer abandons (slow replica)"),
+                ("vectorized_matches", "sequential matches on the columnar engine"),
+                ("batch_selects", "select_many batches"),
+                ("batched_kernel_requests", "requests answered by the stacked kernel"),
+                ("batched_sparse_requests", "requests answered by sparse top-k"),
+                ("batched_columnar_requests", "requests answered columnar per-request"),
+                ("batched_interp_requests", "requests answered by the interpreter"),
+                ("snapshot_builds", "GRIS snapshot (re)builds"),
+                ("snapshot_reuses", "GRIS snapshot TTL reuses"),
+            )
         }
+        self._h_gris_query = self.metrics.histogram(
+            "broker_gris_query_seconds", "per-endpoint GRIS query latency"
+        )
+        self._h_fetch_bw = self.metrics.histogram(
+            "broker_fetch_bandwidth_mb_per_s",
+            "achieved Access Phase bandwidth",
+            buckets=(0.1, 0.5, 1, 2, 5, 10, 25, 50, 100, 250, 1000, float("inf")),
+        )
+        self._h_batch = self.metrics.histogram(
+            "broker_select_many_batch_size", "queries per select_many call",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, float("inf")),
+        )
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Legacy counter view, now backed by the metrics registry. Keys
+        and integer values are unchanged from the pre-obs dict."""
+        out: Dict[str, Any] = {}
+        for k, c in self._ctr.items():
+            v = c.value
+            out[k] = int(v) if float(v).is_integer() else v
+        return out
 
     @property
     def plan_cache(self):
         if self._plan_cache is None:
             from .plancache import PlanCache
 
-            self._plan_cache = PlanCache(self._plan_cache_size)
+            self._plan_cache = PlanCache(self._plan_cache_size, metrics=self.metrics)
         return self._plan_cache
+
+    def explain(self, request_id: str):
+        """The :class:`~repro.obs.DecisionRecord` for a past selection —
+        candidates, plan-cache status, kernel path, per-candidate scores,
+        chosen replica, and (after access) failovers and bandwidths."""
+        return self.audit.get(request_id)
 
     # ------------------------------------------------------------------ Search
     def search(self, lfn: str, attrs: Optional[Sequence[str]] = None) -> List[ReplicaView]:
         """Search Phase: catalog → per-replica GRIS query → ClassAd views."""
-        self.stats["searches"] += 1
+        import time as _time
+
+        self._ctr["searches"].inc()
         replicas = self.catalog.lookup(lfn)
         if not replicas:
             raise NoReplicaError(lfn)
@@ -330,7 +402,9 @@ class DataBroker:
             gris = self.gris_resolver(pfn.endpoint)
             if gris is None:
                 continue  # endpoint unreachable: skip (failover will cover)
+            q0 = _time.perf_counter()
             entry = gris.flattened_view(source=self.client_url)
+            self._h_gris_query.observe(_time.perf_counter() - q0)
             entry.setdefault("endpoint", pfn.endpoint)
             entry.setdefault("replicaPath", pfn.path)
             entry.setdefault("replicaSize", pfn.size)
@@ -343,11 +417,11 @@ class DataBroker:
     # ------------------------------------------------------------------- Match
     def match(self, request: ClassAd, views: Sequence[ReplicaView]) -> List[RankedReplica]:
         """Match Phase: two-sided matchmaking + rank ordering."""
-        self.stats["matches"] += 1
+        self._ctr["matches"].inc()
         if self.use_vectorized:
             ranked = self._match_vectorized(request, views)
             if ranked is not None:
-                self.stats["vectorized_matches"] += 1
+                self._ctr["vectorized_matches"].inc()
                 return ranked
         results = self.matchmaker.match(request, [v.ad for v in views])
         return [RankedReplica(views[m.index], m.rank) for m in results]
@@ -369,14 +443,51 @@ class DataBroker:
         *,
         top_k: Optional[int] = None,
     ) -> List[RankedReplica]:
-        """Search + Match in one call, best replica first."""
+        """Search + Match in one call, best replica first.
+
+        Records a decision record; ``self.last_request_id`` names it and
+        :meth:`explain` retrieves it."""
         req = request if request is not None else default_read_request(self.client_url)
-        attrs = None
-        views = self.search(lfn, attrs)
-        ranked = self.match(req, views)
+        rec = self.audit.begin(lfn, mode="select", at=self.clock.now())
+        rec.top_k = top_k
+        self.last_request_id = rec.request_id
+        try:
+            views, ranked, path = self._select_impl(lfn, req)
+        except BrokerError as e:
+            rec.error = f"{type(e).__name__}: {e}"
+            raise
+        rec.kernel_path = path
+        self._fill_match_audit(rec, [v.pfn.endpoint for v in views], ranked)
         if not ranked:
+            rec.error = "NoMatchError"
             raise NoMatchError(lfn)
         return ranked[:top_k] if top_k else ranked
+
+    def _select_impl(
+        self, lfn: str, req: ClassAd
+    ) -> Tuple[List[ReplicaView], List[RankedReplica], str]:
+        """Search + Match without audit bookkeeping (select_many's
+        interpreter tier reuses this under its own records)."""
+        views = self.search(lfn, None)
+        vec_before = self._ctr["vectorized_matches"].value
+        ranked = self.match(req, views)
+        path = (
+            "vectorized"
+            if self._ctr["vectorized_matches"].value > vec_before
+            else "interpreter"
+        )
+        return views, ranked, path
+
+    def _fill_match_audit(
+        self, rec, candidates: List[str], ranked: Sequence[RankedReplica]
+    ) -> None:
+        """Candidate set + per-candidate scores + chosen replica."""
+        rec.candidates = candidates
+        matched = {rr.pfn.endpoint: rr.rank for rr in ranked}
+        rec.scores = [
+            CandidateScore(ep, matched.get(ep), ep in matched) for ep in candidates
+        ]
+        rec.chosen = ranked[0].pfn.endpoint if ranked else None
 
     # --------------------------------------------------------- Batched Match
     def _snapshot_state(self, endpoints: Sequence[str]) -> _SnapshotState:
@@ -390,7 +501,7 @@ class DataBroker:
             and now - st.built_at < self.snapshot_ttl
             and all(ep in st.row_of for ep in want)
         ):
-            self.stats["snapshot_reuses"] += 1
+            self._ctr["snapshot_reuses"].inc()
             return st
 
         from .snapshot import ReplicaSnapshot
@@ -429,7 +540,7 @@ class DataBroker:
             built_at=now,
         )
         self._snap_state = st
-        self.stats["snapshot_builds"] += 1
+        self._ctr["snapshot_builds"].inc()
         return st
 
     def invalidate_snapshot(self) -> None:
@@ -441,16 +552,25 @@ class DataBroker:
         *,
         top_k: Optional[int] = None,
         use_kernel: Optional[bool] = None,
+        use_sparse: Optional[bool] = None,
         strict: bool = True,
     ) -> List[Any]:
         """Batched Search+Match: many ``(lfn, request)`` selections against
         ONE device-resident snapshot in (at most) one kernel launch.
 
         Requests whose plans lower to the kernel subset are stacked into a
-        single ``matchrank_batched`` call; requests that only compile to
-        the columnar subset run per-request against the same snapshot
-        table; everything else takes the paper-faithful interpreter — all
-        three tiers produce identical selections (tested).
+        single ``matchrank_batched`` call (or, with ``use_sparse`` and a
+        ``top_k``, answered by the rank-order sparse top-k walk when every
+        plan canonicalizes); requests that only compile to the columnar
+        subset run per-request against the same snapshot table; everything
+        else takes the paper-faithful interpreter — all tiers produce
+        identical selections (tested; the sparse tier may order exact
+        rank-ties at the k-boundary differently, which is why it is
+        opt-in).
+
+        Every query gets a decision record (``self.last_request_ids``,
+        :meth:`explain`) noting its kernel path, plan-cache and snapshot
+        status, and per-candidate scores.
 
         Returns one ranked list per query, in query order. With
         ``strict=False``, a query that fails (no replicas / no match)
@@ -459,9 +579,20 @@ class DataBroker:
         poison the batch.
         """
         use_kernel = self.batch_use_kernel if use_kernel is None else use_kernel
-        self.stats["batch_selects"] += 1
+        use_sparse = self.batch_use_sparse if use_sparse is None else use_sparse
+        self._ctr["batch_selects"].inc()
         n = len(queries)
+        self._h_batch.observe(n)
         results: List[Any] = [None] * n
+        recs = [
+            self.audit.begin(lfn, mode="select_many", at=self.clock.now())
+            for lfn, _ in queries
+        ]
+        for rec in recs:
+            rec.top_k = top_k
+        self.last_request_ids = [rec.request_id for rec in recs]
+        if recs:
+            self.last_request_id = recs[-1].request_id
 
         # ---- Search: one catalog+GRIS sweep for the whole batch ----
         reqs: List[Optional[ClassAd]] = [None] * n
@@ -470,30 +601,43 @@ class DataBroker:
         seen = set()
         from .catalog import CatalogError
 
-        for i, (lfn, req) in enumerate(queries):
-            reqs[i] = req if req is not None else default_read_request(self.client_url)
-            try:
-                replicas = self.catalog.lookup(lfn)
-            except CatalogError:
-                replicas = None
-            if not replicas:
-                results[i] = NoReplicaError(lfn)
-                continue
-            replica_lists[i] = replicas
-            for pfn in replicas:
-                if pfn.endpoint not in seen:
-                    seen.add(pfn.endpoint)
-                    all_endpoints.append(pfn.endpoint)
-        self.stats["searches"] += 1
+        with self.tracer.span("broker.batch_search", batch=n):
+            for i, (lfn, req) in enumerate(queries):
+                reqs[i] = req if req is not None else default_read_request(self.client_url)
+                try:
+                    replicas = self.catalog.lookup(lfn)
+                except CatalogError:
+                    replicas = None
+                if not replicas:
+                    results[i] = NoReplicaError(lfn)
+                    recs[i].error = f"NoReplicaError: {lfn}"
+                    continue
+                replica_lists[i] = replicas
+                recs[i].candidates = [p.endpoint for p in replicas]
+                for pfn in replicas:
+                    if pfn.endpoint not in seen:
+                        seen.add(pfn.endpoint)
+                        all_endpoints.append(pfn.endpoint)
+            self._ctr["searches"].inc()
         if not all_endpoints:
             if strict:
                 raise NoReplicaError(queries[0][0] if queries else "<empty batch>")
             return results
-        st = self._snapshot_state(all_endpoints)
+        builds_before = self._ctr["snapshot_builds"].value
+        with self.tracer.span("broker.snapshot", endpoints=len(all_endpoints)):
+            st = self._snapshot_state(all_endpoints)
+        snap_status = (
+            "build" if self._ctr["snapshot_builds"].value > builds_before else "reuse"
+        )
+        for i in range(n):
+            if results[i] is None:
+                recs[i].snapshot = snap_status
         if st.snapshot.n == 0:  # every endpoint unreachable
             for i in range(n):
                 if results[i] is None:
-                    results[i] = NoReplicaError(f"{queries[i][0]}: no reachable replicas")
+                    msg = f"{queries[i][0]}: no reachable replicas"
+                    results[i] = NoReplicaError(msg)
+                    recs[i].error = f"NoReplicaError: {msg}"
             if strict:
                 raise next(r for r in results if isinstance(r, BrokerError))
             return results
@@ -539,37 +683,47 @@ class DataBroker:
         import numpy as np
 
         admits: Dict[int, np.ndarray] = {}
-        for i in range(n):
-            if results[i] is not None:
-                continue
-            req = reqs[i]
-            refs = _referenced_attrs(req.lookup_expr("requirements")) | _referenced_attrs(
-                req.lookup_expr("rank")
-            )
-            if refs & _PER_REPLICA_ATTRS:
-                interp.append(i)  # needs per-(lfn,replica) attrs, not in snapshot
-                continue
-            admit = policy_pass(i)
-            if admit is None:
-                interp.append(i)
-                continue
-            admits[i] = admit
-            try:
-                plan = self.plan_cache.kernel_plan(req, vocab, env=self.env)
-                kernel_batch.append(i)
-                kernel_plans.append(plan)
-                continue
-            except CompileError:
-                pass
-            try:
-                self.plan_cache.columnar_program(req, vocab, env=self.env)
-                columnar.append(i)
-            except CompileError:
-                interp.append(i)
+        with self.tracer.span("broker.lowering"):
+            for i in range(n):
+                if results[i] is not None:
+                    continue
+                req = reqs[i]
+                refs = _referenced_attrs(
+                    req.lookup_expr("requirements")
+                ) | _referenced_attrs(req.lookup_expr("rank"))
+                if refs & _PER_REPLICA_ATTRS:
+                    interp.append(i)  # needs per-(lfn,replica) attrs, not in snapshot
+                    continue
+                pcs = self.plan_cache.stats
+                pc_before = (pcs["hits"], pcs["misses"], pcs["negative_hits"])
+                admit = policy_pass(i)
+                if admit is None:
+                    interp.append(i)
+                else:
+                    admits[i] = admit
+                    try:
+                        plan = self.plan_cache.kernel_plan(req, vocab, env=self.env)
+                        kernel_batch.append(i)
+                        kernel_plans.append(plan)
+                    except CompileError:
+                        try:
+                            self.plan_cache.columnar_program(req, vocab, env=self.env)
+                            columnar.append(i)
+                        except CompileError:
+                            interp.append(i)
+                pcs = self.plan_cache.stats
+                if pcs["misses"] > pc_before[1]:
+                    recs[i].plan_cache = "miss"
+                elif pcs["hits"] > pc_before[0] or pcs["negative_hits"] > pc_before[2]:
+                    recs[i].plan_cache = "hit"
 
         # ---- tier 1: one stacked kernel launch for the whole sub-batch ----
         if kernel_batch:
-            from repro.kernels.matchrank.ops import matchrank_batched, stack_plans
+            from repro.kernels.matchrank.ops import (
+                matchrank_batched,
+                matchrank_batched_topk,
+                stack_plans,
+            )
 
             attrs, valid, n_rows = st.snapshot.device_columns()
             admit_mat = np.zeros((len(kernel_batch), n_rows), dtype=np.float32)
@@ -579,49 +733,101 @@ class DataBroker:
                     r = st.row_of.get(pfn.endpoint)
                     if r is not None and row_ok[r] > 0:
                         admit_mat[bi, r] = 1.0
-            mask, score, _, _ = matchrank_batched(
-                attrs,
-                valid,
-                stack_plans(kernel_plans),
-                admit=admit_mat,
-                n_rows=n_rows,
-                use_kernel=use_kernel,
-            )
-            for bi, i in enumerate(kernel_batch):
-                results[i] = self._ranked_from_scores(
-                    queries[i][0], replica_lists[i], st, mask[bi], score[bi]
-                )
-                self.stats["batched_kernel_requests"] += 1
+            sparse_done = False
+            if use_sparse and top_k:
+                from repro.kernels.matchrank.sparse import canonicalize_plans
+
+                na = len(kernel_plans[0].attr_names)
+                if canonicalize_plans(kernel_plans, na) is not None:
+                    l_attrs, l_valid = st.snapshot.logical_columns()
+                    with self.tracer.span(
+                        "broker.sparse_topk",
+                        batch=len(kernel_batch),
+                        rows=st.snapshot.n,
+                        k=top_k,
+                    ):
+                        ti, ts = matchrank_batched_topk(
+                            l_attrs,
+                            l_valid,
+                            kernel_plans,
+                            k=top_k,
+                            admit=admit_mat[:, : st.snapshot.n],
+                            rank_order=st.snapshot.rank_order,
+                        )
+                    for bi, i in enumerate(kernel_batch):
+                        results[i] = self._ranked_from_topk(
+                            replica_lists[i], st, ti[bi], ts[bi]
+                        )
+                        recs[i].kernel_path = "sparse_topk"
+                        self._fill_batched_audit(recs[i], st, results[i])
+                        self._ctr["batched_sparse_requests"].inc()
+                    sparse_done = True
+            if not sparse_done:
+                with self.tracer.span(
+                    "broker.kernel_launch",
+                    batch=len(kernel_batch),
+                    rows=n_rows,
+                    use_kernel=use_kernel,
+                ):
+                    mask, score, _, _ = matchrank_batched(
+                        attrs,
+                        valid,
+                        stack_plans(kernel_plans),
+                        admit=admit_mat,
+                        n_rows=n_rows,
+                        use_kernel=use_kernel,
+                    )
+                for bi, i in enumerate(kernel_batch):
+                    results[i] = self._ranked_from_scores(
+                        queries[i][0], replica_lists[i], st, mask[bi], score[bi]
+                    )
+                    recs[i].kernel_path = "batched_kernel"
+                    self._fill_batched_audit(
+                        recs[i], st, results[i], mask=mask[bi], score=score[bi]
+                    )
+                    self._ctr["batched_kernel_requests"].inc()
 
         # ---- tier 2: columnar programs over the shared snapshot table ----
         for i in columnar:
-            prog = self.plan_cache.columnar_program(reqs[i], vocab, env=self.env)
-            mask, rank = prog.run(st.table, np)
-            mask = np.asarray(mask, bool) & (admits[i] > 0)
-            row_admit = np.zeros((st.snapshot.n,), bool)
-            for pfn in replica_lists[i]:
-                r = st.row_of.get(pfn.endpoint)
-                if r is not None:
-                    row_admit[r] = True
-            mask &= row_admit
-            results[i] = self._ranked_from_scores(
-                queries[i][0], replica_lists[i], st, mask, np.asarray(rank, np.float64)
-            )
-            self.stats["batched_columnar_requests"] += 1
+            with self.tracer.span("broker.columnar", lfn=queries[i][0]):
+                prog = self.plan_cache.columnar_program(reqs[i], vocab, env=self.env)
+                mask, rank = prog.run(st.table, np)
+                mask = np.asarray(mask, bool) & (admits[i] > 0)
+                row_admit = np.zeros((st.snapshot.n,), bool)
+                for pfn in replica_lists[i]:
+                    r = st.row_of.get(pfn.endpoint)
+                    if r is not None:
+                        row_admit[r] = True
+                mask &= row_admit
+                score = np.asarray(rank, np.float64)
+                results[i] = self._ranked_from_scores(
+                    queries[i][0], replica_lists[i], st, mask, score
+                )
+            recs[i].kernel_path = "batched_columnar"
+            self._fill_batched_audit(recs[i], st, results[i], mask=mask, score=score)
+            self._ctr["batched_columnar_requests"].inc()
 
         # ---- tier 3: the paper-faithful interpreter, per request ----
         for i in interp:
-            try:
-                results[i] = self.select(queries[i][0], reqs[i])
-            except BrokerError as e:
-                results[i] = e
-            self.stats["batched_interp_requests"] += 1
+            with self.tracer.span("broker.interp", lfn=queries[i][0]):
+                try:
+                    views, ranked, _ = self._select_impl(queries[i][0], reqs[i])
+                    self._fill_match_audit(
+                        recs[i], [v.pfn.endpoint for v in views], ranked
+                    )
+                    results[i] = ranked
+                except BrokerError as e:
+                    recs[i].error = f"{type(e).__name__}: {e}"
+                    results[i] = e
+            recs[i].kernel_path = "batched_interp"
+            self._ctr["batched_interp_requests"].inc()
 
         # ---- finalize ----
         for i in range(n):
             r = results[i]
             if isinstance(r, list) and not r:
                 results[i] = NoMatchError(queries[i][0])
+                recs[i].error = "NoMatchError"
         if strict:
             for r in results:
                 if isinstance(r, BrokerError):
@@ -635,27 +841,53 @@ class DataBroker:
     ) -> List[RankedReplica]:
         """Snapshot rows + per-request scores → the same rank-ordered
         RankedReplica list the interpreter produces (same tiebreak)."""
-        by_row: Dict[int, PhysicalFile] = {}
-        for pfn in replicas:
-            r = st.row_of.get(pfn.endpoint)
-            if r is not None:
-                by_row.setdefault(r, pfn)
-
-        def name_of(r: int) -> str:
-            e = st.entries[r]
-            for attr in ("name", "hostname", "endpoint", "url"):
-                for k, v in e.items():
-                    if k.lower() == attr and isinstance(v, str):
-                        return v
-            return f"resource-{r}"
-
+        by_row = _rows_of(replicas, st)
         rows = [r for r in by_row if bool(mask[r])]
-        rows.sort(key=lambda r: (-float(score[r]), name_of(r), r))
+        rows.sort(key=lambda r: (-float(score[r]), _row_name(st, r), r))
         out = []
         for r in rows:
             view = ReplicaView(by_row[r], st.entries[r], st.ads[r])
             out.append(RankedReplica(view, float(score[r])))
         return out
+
+    def _ranked_from_topk(
+        self, replicas: Sequence[PhysicalFile], st: _SnapshotState, idx, scores
+    ) -> List[RankedReplica]:
+        """Sparse top-k winners (row indices + scores) → RankedReplica
+        list, re-sorted with the dense tiebreak key."""
+        by_row = _rows_of(replicas, st)
+        picked: List[Tuple[int, float]] = []
+        for r, s in zip(idx, scores):
+            r, s = int(r), float(s)
+            if r < 0 or (math.isinf(s) and s < 0):
+                continue  # empty slot past the request's match count
+            if r in by_row:
+                picked.append((r, s))
+        picked.sort(key=lambda rs: (-rs[1], _row_name(st, rs[0]), rs[0]))
+        return [
+            RankedReplica(ReplicaView(by_row[r], st.entries[r], st.ads[r]), s)
+            for r, s in picked
+        ]
+
+    def _fill_batched_audit(
+        self, rec, st: _SnapshotState, result: List[RankedReplica], mask=None, score=None
+    ) -> None:
+        """Per-candidate fates for a snapshot-tier request. Dense tiers
+        pass row-level (mask, score); the sparse tier only probed until k
+        candidates passed, so non-winners are recorded unmatched/unscored."""
+        if mask is not None:
+            scores = []
+            for ep in rec.candidates:
+                r = st.row_of.get(ep)
+                ok = r is not None and bool(mask[r])
+                scores.append(CandidateScore(ep, float(score[r]) if ok else None, ok))
+            rec.scores = scores
+        else:
+            won = {rr.pfn.endpoint: rr.rank for rr in result}
+            rec.scores = [
+                CandidateScore(ep, won.get(ep), ep in won) for ep in rec.candidates
+            ]
+        rec.chosen = result[0].pfn.endpoint if result else None
 
     # ------------------------------------------------------------------ Access
     def fetch(
@@ -677,6 +909,7 @@ class DataBroker:
         transfer: TransferService,
         *,
         monitor_stragglers: bool = True,
+        request_id: Optional[str] = None,
     ) -> FetchOutcome:
         """Access Phase with failover and straggler mitigation, over a
         pre-computed ranked list (e.g. from a batched ``select_many``).
@@ -685,16 +918,65 @@ class DataBroker:
         (failover); a transfer whose observed chunk bandwidth stays below
         ``straggler_factor × predicted`` for ``straggler_patience`` chunks
         is abandoned mid-flight and the next replica is tried.
+
+        The outcome annotates the selection's decision record — pass the
+        ``request_id`` the selection produced, or let the broker attach to
+        ``last_request_id`` when its lfn matches.
         """
+        with self.tracer.span("broker.access", lfn=lfn):
+            return self._access_impl(
+                lfn,
+                ranked,
+                transfer,
+                monitor_stragglers=monitor_stragglers,
+                request_id=request_id,
+            )
+
+    def _access_impl(
+        self,
+        lfn: str,
+        ranked: List[RankedReplica],
+        transfer: TransferService,
+        *,
+        monitor_stragglers: bool,
+        request_id: Optional[str],
+    ) -> FetchOutcome:
         from repro.storage.transfer import TransferFailure  # cycle-free at runtime
 
         if not ranked:
             raise NoMatchError(lfn)
-        self.stats["fetches"] += 1
+        rid = request_id or self.last_request_id
+        rec = None
+        if rid is not None and rid in self.audit:
+            cand = self.audit.get(rid)
+            # implicit attachment only when the record is for this file
+            if request_id is not None or cand.lfn == lfn:
+                rec = cand
+        self._ctr["fetches"].inc()
         attempts = 0
         switched = 0
         errors: List[str] = []
         abandoned: List[RankedReplica] = []  # straggler-abandoned, still alive
+
+        def _finish(
+            rr: RankedReplica, payload, nbytes, seconds, predicted
+        ) -> FetchOutcome:
+            self.local_monitor.observe_transfer(
+                "read", rr.pfn.endpoint, nbytes, seconds, self.clock.now()
+            )
+            bw = nbytes / seconds if seconds > 0 else 0.0
+            self._h_fetch_bw.observe(bw / 1e6)
+            if rec is not None:
+                rec.accessed = True
+                rec.fetched_from = rr.pfn.endpoint
+                rec.attempts = attempts
+                rec.predicted_bandwidth = predicted
+                rec.observed_bandwidth = bw
+                rec.nbytes = int(nbytes)
+            return FetchOutcome(
+                lfn, rr.pfn, nbytes, seconds, attempts, switched, ranked, payload
+            )
+
         for rr in ranked:
             if attempts >= self.max_attempts:
                 break
@@ -718,7 +1000,9 @@ class DataBroker:
                     result = self._monitored_read(transfer, rr, predicted)
                     if result is None:  # straggler: try next replica
                         switched += 1
-                        self.stats["straggler_switches"] += 1
+                        self._ctr["straggler_switches"].inc()
+                        if rec is not None:
+                            rec.straggler_switches += 1
                         abandoned.append(rr)
                         continue
                     payload, nbytes, seconds = result
@@ -726,12 +1010,11 @@ class DataBroker:
                     payload, nbytes, seconds = transfer.read(rr.pfn, self.client_url)
             except TransferFailure as e:
                 errors.append(str(e))
-                self.stats["failovers"] += 1
+                self._ctr["failovers"].inc()
+                if rec is not None:
+                    rec.failovers += 1
                 continue
-            self.local_monitor.observe_transfer(
-                "read", rr.pfn.endpoint, nbytes, seconds, self.clock.now()
-            )
-            return FetchOutcome(lfn, rr.pfn, nbytes, seconds, attempts, switched, ranked, payload)
+            return _finish(rr, payload, nbytes, seconds, predicted)
         # Mitigation must never turn a working fetch into a failure: if the
         # list was exhausted by straggler switches, take the best abandoned
         # replica to completion without monitoring.
@@ -742,10 +1025,10 @@ class DataBroker:
             except TransferFailure as e:
                 errors.append(str(e))
                 continue
-            self.local_monitor.observe_transfer(
-                "read", rr.pfn.endpoint, nbytes, seconds, self.clock.now()
-            )
-            return FetchOutcome(lfn, rr.pfn, nbytes, seconds, attempts, switched, ranked, payload)
+            return _finish(rr, payload, nbytes, seconds, None)
+        if rec is not None:
+            rec.attempts = attempts
+            rec.error = f"AccessFailed: all {attempts} attempt(s) failed"
         raise BrokerError(
             f"all {attempts} attempt(s) to fetch {lfn!r} failed"
             + (f": {errors}" if errors else "")

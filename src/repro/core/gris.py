@@ -69,12 +69,15 @@ class DynamicAttribute:
     _cached: Any = None
     _cached_at: float = float("-inf")
     calls: int = 0  # instrumentation: provider invocations (cache misses)
+    hits: int = 0  # instrumentation: TTL-cache hits
 
     def value(self, now: float) -> Any:
         if now - self._cached_at >= self.ttl:
             self._cached = self.provider()
             self._cached_at = now
             self.calls += 1
+        else:
+            self.hits += 1
         return self._cached
 
     def invalidate(self) -> None:
@@ -114,6 +117,30 @@ class StorageGRIS:
         self._bw_summary: Optional[Dict[str, Any]] = None
         self._bw_sources: Dict[str, Dict[str, Any]] = {}
         self.query_count = 0  # instrumentation
+        # optional obs registry (settable after construction: a broker can
+        # attach its own to the GRISes it polls — see launch/serve.py)
+        self.metrics: Any = None
+
+    # -- instrumentation ------------------------------------------------------
+    def ttl_cache_stats(self) -> Dict[str, int]:
+        """Aggregate dynamic-attribute TTL cache hits/misses (provider
+        invocations are misses — the expensive shell-backend runs)."""
+        hits = sum(d.hits for d in self._dynamic.values())
+        misses = sum(d.calls for d in self._dynamic.values())
+        return {"hits": hits, "misses": misses}
+
+    def _observe_query(self) -> None:
+        self.query_count += 1
+        if self.metrics is not None:
+            self.metrics.counter(
+                "gris_queries_total", "LDAP-style searches served"
+            ).inc()
+            stats = self.ttl_cache_stats()
+            lookups = stats["hits"] + stats["misses"]
+            self.metrics.gauge(
+                "gris_dynamic_ttl_hit_rate",
+                "fraction of dynamic-attribute reads served from TTL cache",
+            ).set(stats["hits"] / lookups if lookups else 0.0)
 
     # -- attribute management ------------------------------------------------
     def set_static(self, name: str, value: Any) -> None:
@@ -203,7 +230,7 @@ class StorageGRIS:
         *flattens* the matching child into the volume view, which is how
         brokers read end-to-end stats for their own site in one query.
         """
-        self.query_count += 1
+        self._observe_query()
         if isinstance(flt, str):
             flt = parse_filter(flt)
 

@@ -54,22 +54,36 @@ class PlanCache:
     built, so sharing is safe for concurrent readers.
     """
 
-    def __init__(self, maxsize: int = 256):
+    def __init__(self, maxsize: int = 256, *, metrics: Any = None):
         self.maxsize = int(maxsize)
         self._entries: "OrderedDict[Tuple, Any]" = OrderedDict()
         self.stats = {"hits": 0, "misses": 0, "evictions": 0, "negative_hits": 0}
+        # optional mirror into an obs MetricsRegistry (labels: event=...);
+        # self.stats stays the source of truth for exact-count consumers
+        self._mctr = (
+            {
+                ev: metrics.counter(
+                    "plan_cache_events_total", "plan-cache lookups by outcome", event=ev
+                )
+                for ev in self.stats
+            }
+            if metrics is not None
+            else None
+        )
+
+    def _bump(self, event: str) -> None:
+        self.stats[event] += 1
+        if self._mctr is not None:
+            self._mctr[event].inc()
 
     # ------------------------------------------------------------- plumbing
     def _get(self, key: Tuple) -> Tuple[bool, Any]:
         if key in self._entries:
             self._entries.move_to_end(key)
             val = self._entries[key]
-            if isinstance(val, CompileError):
-                self.stats["negative_hits"] += 1
-            else:
-                self.stats["hits"] += 1
+            self._bump("negative_hits" if isinstance(val, CompileError) else "hits")
             return True, val
-        self.stats["misses"] += 1
+        self._bump("misses")
         return False, None
 
     def _put(self, key: Tuple, val: Any) -> None:
@@ -77,7 +91,7 @@ class PlanCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
-            self.stats["evictions"] += 1
+            self._bump("evictions")
 
     def _cached_compile(self, key: Tuple, build: Callable[[], Any]) -> Any:
         hit, val = self._get(key)

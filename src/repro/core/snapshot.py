@@ -24,6 +24,7 @@ state ships only the tiny per-request plan tensors per launch.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -124,8 +125,8 @@ class ReplicaSnapshot:
             if j is None:
                 continue
             x = _numeric(v)
-            if x is None:
-                continue
+            if x is None or not math.isfinite(x):
+                continue  # NaN/inf publishes as Undefined, not a poisoned cell
             vals[j] = np.float32(x)
             ok[j] = 1.0
         return vals, ok

@@ -62,7 +62,7 @@ class DataPipeline:
         self.manifest = manifest
         self.spec = spec
         self.broker = broker or grid.broker_for(host_url)
-        self.transfer = grid.transfer_service()
+        self.transfer = grid.transfer_service(metrics=self.broker.metrics)
         self.min_bandwidth = min_bandwidth
         self._cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self._cache_max = cache_shards

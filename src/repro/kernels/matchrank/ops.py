@@ -196,10 +196,20 @@ def stack_plans(plans: Sequence[KernelPlan]) -> BatchedPlan:
 def pad_columns(
     attrs: np.ndarray, valid: np.ndarray, a_pad: int, block_s: int = 512
 ) -> Tuple[np.ndarray, np.ndarray, int]:
-    """Pad [S, A] column blocks to [S_PAD, A_PAD]; padded rows invalid."""
+    """Pad [S, A] column blocks to [S_PAD, A_PAD]; padded rows invalid.
+
+    Non-finite attribute cells (NaN/±inf from a misbehaving publisher)
+    are zeroed and marked invalid — Condor's Undefined semantics —
+    instead of poisoning the f32 cast and every comparison downstream.
+    """
     s, a = attrs.shape
     s_pad = max(_round_up(s, block_s), block_s)
-    attrs_p = _pad_to(_pad_to(attrs.astype(np.float32), a_pad, axis=1), s_pad, axis=0)
+    attrs_f = np.asarray(attrs, dtype=np.float32)
+    finite = np.isfinite(attrs_f)
+    if not finite.all():
+        attrs_f = np.where(finite, attrs_f, np.float32(0.0))
+        valid = np.asarray(valid, dtype=bool) & finite
+    attrs_p = _pad_to(_pad_to(attrs_f, a_pad, axis=1), s_pad, axis=0)
     valid_p = _pad_to(_pad_to(valid.astype(np.float32), a_pad, axis=1), s_pad, axis=0)
     return attrs_p, valid_p, s_pad
 

@@ -35,6 +35,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--endpoints", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the shared metrics registry (JSON + Prometheus "
+                         "exposition) after serving")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump Chrome trace-event JSON (load in Perfetto)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch).reduced()
@@ -46,6 +51,10 @@ def main(argv=None) -> int:
     host = "client://serve-replica0"
     grid.add_client(host, zone="zone1")
     broker = grid.broker_for(host)
+    # attach the broker's registry to every GRIS it polls: query counts and
+    # TTL hit rates land in the same exposition as the broker's own series
+    for ep in grid.endpoints.values():
+        ep.gris.metrics = broker.metrics
     mgr = CheckpointManager(f"weights-{args.arch}", grid, broker,
                             replication=2, chunk_bytes=1 << 20)
     mgr.save(0, params)
@@ -78,6 +87,12 @@ def main(argv=None) -> int:
         "decode_s": round(result.decode_s, 3),
         "decode_tok_per_s": round(result.decode_tokens_per_s, 1),
     }, indent=2))
+    if args.metrics_out:
+        broker.metrics.dump_json(args.metrics_out, extra={"arch": args.arch})
+        print(f"metrics registry -> {args.metrics_out}")
+    if args.trace_out:
+        broker.tracer.dump_json(args.trace_out)
+        print(f"chrome trace -> {args.trace_out}")
     return 0
 
 

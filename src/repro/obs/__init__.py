@@ -1,0 +1,45 @@
+"""Unified observability: metrics, tracing spans, selection audit trail.
+
+Dependency-free instrumentation for the whole selection pipeline:
+
+  * :mod:`.metrics` — labeled Counter/Gauge/Histogram registry with
+    bounded label sets, Prometheus text exposition and JSON snapshots,
+  * :mod:`.trace` — nested tracing spans (context manager / decorator)
+    exportable as Chrome trace-event JSON (Perfetto), with optional
+    ``jax.profiler`` trace-annotation passthrough around kernel dispatch,
+  * :mod:`.audit` — per-selection decision records answering "why was
+    this replica chosen?" (``DataBroker.explain``),
+  * :mod:`.telemetry` — the broker's registry published back through the
+    GRIS/LDIF mechanism it consumes (``BrokerTelemetry`` DIT subtree).
+
+See DESIGN.md §7 for the architecture and the decision-record schema.
+"""
+
+from .audit import AuditTrail, CandidateScore, DecisionRecord
+from .metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricError,
+    MetricsRegistry,
+)
+from .telemetry import BROKER_METRIC, BROKER_TELEMETRY, BrokerTelemetryGRIS
+from .trace import Span, Tracer
+
+__all__ = [
+    "AuditTrail",
+    "CandidateScore",
+    "DecisionRecord",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricError",
+    "MetricsRegistry",
+    "DEFAULT_BUCKETS",
+    "Span",
+    "Tracer",
+    "BROKER_TELEMETRY",
+    "BROKER_METRIC",
+    "BrokerTelemetryGRIS",
+]

@@ -1,0 +1,404 @@
+"""Labeled metrics registry: Counter / Gauge / Histogram, Prometheus text.
+
+The observability backbone for every subsystem (broker, scheduler, serve
+engine, transfer service, GRIS, caches, train loop). Deliberately
+dependency-free — the registry mirrors the Prometheus client-library data
+model without importing it:
+
+  * metric *families* are (kind, name, help, label names); *children* are
+    one sample series per label-value tuple,
+  * label sets are **bounded** per family (``max_label_sets``): once the
+    cap is reached, new label values collapse into a single ``__other__``
+    series instead of growing without bound (a broker fleet labels by
+    endpoint/client URL, which is effectively unbounded),
+  * :meth:`MetricsRegistry.expose_text` renders the standard Prometheus
+    text exposition format; :meth:`to_dict`/:meth:`from_dict` round-trip
+    the full registry through plain JSON for archival (bench snapshots,
+    CI artifacts, GRIS publication).
+
+Hot-path discipline: ``counter()``/``gauge()``/``histogram()`` resolve a
+family + child once; callers on hot paths hold the returned object and
+call ``inc()``/``observe()`` directly (an attribute add, no dict walk).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from bisect import bisect_left
+from collections import OrderedDict
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = [
+    "MetricError",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_BUCKETS",
+]
+
+
+class MetricError(ValueError):
+    """Invalid metric name / label / operation."""
+
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+#: Latency-shaped default buckets (seconds), Prometheus-style.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+    0.25, 0.5, 1.0, 2.5, 5.0, 10.0, float("inf"),
+)
+
+#: The collapsed label value used once a family's label-set cap is hit.
+OVERFLOW_LABEL = "__other__"
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample-value formatting (integers without a fraction)."""
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    if math.isnan(v):
+        return "NaN"
+    f = float(v)
+    if f.is_integer() and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+class Counter:
+    """Monotonically non-decreasing sample."""
+
+    kind = "counter"
+    __slots__ = ("_value",)
+
+    def __init__(self) -> None:
+        self._value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise MetricError("counters only go up")
+        self._value += amount
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def _dump(self) -> Dict[str, Any]:
+        return {"value": self._value}
+
+    def _load(self, d: Mapping[str, Any]) -> None:
+        self._value = float(d["value"])
+
+
+class Gauge:
+    """Sample that can go up and down (queue depth, loss, hit rate)."""
+
+    kind = "gauge"
+    __slots__ = ("_value",)
+
+    def __init__(self) -> None:
+        self._value = 0.0
+
+    def set(self, value: float) -> None:
+        self._value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self._value -= amount
+
+    def set_max(self, value: float) -> None:
+        """Keep the running maximum (high-water marks)."""
+        if value > self._value:
+            self._value = float(value)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def _dump(self) -> Dict[str, Any]:
+        return {"value": self._value}
+
+    def _load(self, d: Mapping[str, Any]) -> None:
+        self._value = float(d["value"])
+
+
+class Histogram:
+    """Cumulative-bucket histogram (Prometheus semantics).
+
+    ``observe`` is O(log buckets); per-bucket counts are stored
+    non-cumulative and cumulated at exposition time.
+    """
+
+    kind = "histogram"
+    __slots__ = ("bounds", "counts", "_sum", "_count")
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS) -> None:
+        bounds = sorted(float(b) for b in buckets)
+        if not bounds or bounds[-1] != math.inf:
+            bounds.append(math.inf)
+        self.bounds: Tuple[float, ...] = tuple(bounds)
+        self.counts: List[int] = [0] * len(self.bounds)
+        self._sum = 0.0
+        self._count = 0
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        self.counts[bisect_left(self.bounds, v)] += 1
+        self._sum += v
+        self._count += 1
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def cumulative(self) -> List[Tuple[float, int]]:
+        out: List[Tuple[float, int]] = []
+        running = 0
+        for bound, c in zip(self.bounds, self.counts):
+            running += c
+            out.append((bound, running))
+        return out
+
+    def _dump(self) -> Dict[str, Any]:
+        return {
+            "buckets": [b if b != math.inf else "+Inf" for b in self.bounds],
+            "counts": list(self.counts),
+            "sum": self._sum,
+            "count": self._count,
+        }
+
+    def _load(self, d: Mapping[str, Any]) -> None:
+        self.bounds = tuple(
+            math.inf if b == "+Inf" else float(b) for b in d["buckets"]
+        )
+        self.counts = [int(c) for c in d["counts"]]
+        self._sum = float(d["sum"])
+        self._count = int(d["count"])
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class _Family:
+    """One metric family: shared name/help/label-names, many children."""
+
+    __slots__ = ("kind", "name", "help", "label_names", "buckets",
+                 "max_label_sets", "children")
+
+    def __init__(
+        self,
+        kind: str,
+        name: str,
+        help: str,
+        label_names: Tuple[str, ...],
+        buckets: Optional[Sequence[float]],
+        max_label_sets: int,
+    ):
+        self.kind = kind
+        self.name = name
+        self.help = help
+        self.label_names = label_names
+        self.buckets = tuple(buckets) if buckets is not None else None
+        self.max_label_sets = max_label_sets
+        self.children: "OrderedDict[Tuple[str, ...], Any]" = OrderedDict()
+
+    def _new_child(self):
+        if self.kind == "histogram":
+            return Histogram(self.buckets or DEFAULT_BUCKETS)
+        return _KINDS[self.kind]()
+
+    def child(self, label_values: Tuple[str, ...]):
+        c = self.children.get(label_values)
+        if c is not None:
+            return c
+        if self.label_names and len(self.children) >= self.max_label_sets:
+            # bounded label sets: collapse the overflow into one series
+            label_values = tuple(OVERFLOW_LABEL for _ in self.label_names)
+            c = self.children.get(label_values)
+            if c is not None:
+                return c
+        c = self._new_child()
+        self.children[label_values] = c
+        return c
+
+
+class MetricsRegistry:
+    """A process- or component-scoped collection of metric families.
+
+    Each :class:`~repro.core.broker.DataBroker` owns one (decentralized,
+    like the matchmaker); cooperating components (scheduler, serve
+    engine, transfer service) share the broker's so one exposition covers
+    the whole selection pipeline. Pass an explicit registry to aggregate
+    across components, or keep separate registries and merge snapshots.
+    """
+
+    def __init__(self, *, max_label_sets: int = 64) -> None:
+        self.max_label_sets = int(max_label_sets)
+        self._families: "OrderedDict[str, _Family]" = OrderedDict()
+
+    # ------------------------------------------------------------ creation
+    def _family(
+        self,
+        kind: str,
+        name: str,
+        help: str,
+        label_names: Tuple[str, ...],
+        buckets: Optional[Sequence[float]] = None,
+    ) -> _Family:
+        if not _NAME_RE.match(name):
+            raise MetricError(f"invalid metric name {name!r}")
+        for ln in label_names:
+            if not _LABEL_RE.match(ln) or ln == "le":
+                raise MetricError(f"invalid label name {ln!r}")
+        fam = self._families.get(name)
+        if fam is None:
+            fam = _Family(kind, name, help, label_names, buckets,
+                          self.max_label_sets)
+            self._families[name] = fam
+            return fam
+        if fam.kind != kind:
+            raise MetricError(
+                f"{name!r} already registered as a {fam.kind}, not {kind}"
+            )
+        if fam.label_names != label_names:
+            raise MetricError(
+                f"{name!r} label names {fam.label_names} != {label_names}"
+            )
+        return fam
+
+    def _metric(self, kind, name, help, labels, buckets=None):
+        names = tuple(sorted(labels))
+        fam = self._family(kind, name, help, names, buckets)
+        values = tuple(str(labels[k]) for k in names)
+        return fam.child(values)
+
+    def counter(self, name: str, help: str = "", **labels: Any) -> Counter:
+        return self._metric("counter", name, help, labels)
+
+    def gauge(self, name: str, help: str = "", **labels: Any) -> Gauge:
+        return self._metric("gauge", name, help, labels)
+
+    def histogram(
+        self,
+        name: str,
+        help: str = "",
+        *,
+        buckets: Optional[Sequence[float]] = None,
+        **labels: Any,
+    ) -> Histogram:
+        return self._metric("histogram", name, help, labels, buckets)
+
+    # ------------------------------------------------------------- reading
+    def value(self, name: str, **labels: Any) -> float:
+        """Point read of one counter/gauge sample (tests, stats views)."""
+        fam = self._families[name]
+        values = tuple(str(labels[k]) for k in sorted(labels))
+        return fam.children[values].value
+
+    def families(self) -> List[str]:
+        return list(self._families)
+
+    def samples(self) -> List[Tuple[str, Dict[str, str], Any]]:
+        """Flat (name, labels, metric) triples — GRIS publication walks
+        this."""
+        out = []
+        for fam in self._families.values():
+            for values, metric in fam.children.items():
+                out.append((fam.name, dict(zip(fam.label_names, values)), metric))
+        return out
+
+    # --------------------------------------------------------- exposition
+    def expose_text(self) -> str:
+        """The Prometheus text exposition format (version 0.0.4)."""
+        lines: List[str] = []
+        for fam in self._families.values():
+            if fam.help:
+                lines.append(f"# HELP {fam.name} {_escape(fam.help)}")
+            lines.append(f"# TYPE {fam.name} {fam.kind}")
+            for values, metric in fam.children.items():
+                base = [
+                    f'{k}="{_escape(v)}"'
+                    for k, v in zip(fam.label_names, values)
+                ]
+                if fam.kind == "histogram":
+                    for bound, cum in metric.cumulative():
+                        lbl = ",".join(base + [f'le="{_fmt(bound)}"'])
+                        lines.append(f"{fam.name}_bucket{{{lbl}}} {cum}")
+                    suffix = "{" + ",".join(base) + "}" if base else ""
+                    lines.append(f"{fam.name}_sum{suffix} {_fmt(metric.sum)}")
+                    lines.append(f"{fam.name}_count{suffix} {_fmt(metric.count)}")
+                else:
+                    suffix = "{" + ",".join(base) + "}" if base else ""
+                    lines.append(f"{fam.name}{suffix} {_fmt(metric.value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe snapshot of every family and child."""
+        fams = []
+        for fam in self._families.values():
+            fams.append(
+                {
+                    "kind": fam.kind,
+                    "name": fam.name,
+                    "help": fam.help,
+                    "label_names": list(fam.label_names),
+                    "buckets": (
+                        [b if b != math.inf else "+Inf" for b in fam.buckets]
+                        if fam.buckets is not None
+                        else None
+                    ),
+                    "children": [
+                        {"labels": list(values), **metric._dump()}
+                        for values, metric in fam.children.items()
+                    ],
+                }
+            )
+        return {"families": fams}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any], *, max_label_sets: int = 64) -> "MetricsRegistry":
+        reg = cls(max_label_sets=max_label_sets)
+        for f in d["families"]:
+            buckets = None
+            if f.get("buckets") is not None:
+                buckets = [
+                    math.inf if b == "+Inf" else float(b) for b in f["buckets"]
+                ]
+            fam = reg._family(
+                f["kind"], f["name"], f.get("help", ""),
+                tuple(f["label_names"]), buckets,
+            )
+            for child in f["children"]:
+                metric = fam.child(tuple(child["labels"]))
+                metric._load(child)
+        return reg
+
+    def dump_json(self, path: str, *, extra: Optional[Mapping[str, Any]] = None) -> None:
+        """Archive the registry: JSON families + the text exposition, plus
+        caller-supplied context (bench timings, run args)."""
+        payload: Dict[str, Any] = dict(extra or {})
+        payload.update(self.to_dict())
+        payload["exposition"] = self.expose_text()
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")

@@ -1,0 +1,186 @@
+"""GRIS-published broker telemetry: the obs loop closed through MDS.
+
+The paper's whole premise is that *published* dynamic state (GRIS/GIIS
+attributes) drives better selection. This module applies the same
+mechanism to the broker itself: a :class:`BrokerTelemetryGRIS` publishes
+a broker's metrics registry as an LDAP DIT subtree —
+
+    gbt=<broker>, o=grid                          BrokerTelemetry (summary)
+      └─ gbm=<metric>{labels}, gbt=<broker>, ...  BrokerMetric (per series)
+
+— so a GIIS aggregates broker health exactly like it aggregates storage
+attributes: ``register()`` the publisher, then ``search`` for
+``objectClass=Grid::Broker::Telemetry`` across the fleet. The object
+classes follow the §3 schema machinery (MUST/MAY, cisfloat/cis,
+validated before publication).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.gris import Clock
+from repro.core.ldif import Entry, Filter, dumps as ldif_dumps, parse_filter
+from repro.core.schema import AttributeSpec, ObjectClass, validate_entry
+
+__all__ = ["BROKER_TELEMETRY", "BROKER_METRIC", "BrokerTelemetryGRIS"]
+
+
+def _f(name: str) -> AttributeSpec:
+    return AttributeSpec(name, "cisfloat", True)
+
+
+def _s(name: str) -> AttributeSpec:
+    return AttributeSpec(name, "cis", True)
+
+
+#: Broker-health summary — one entry per broker, the thing a GIIS-wide
+#: "which brokers are unhealthy?" query reads.
+BROKER_TELEMETRY = ObjectClass(
+    name="Grid::Broker::Telemetry",
+    rdn="gbt",
+    subclass_of=None,
+    child_of=("Grid::organizationalUnit", "Grid::organization", "Grid::Top"),
+    must=(
+        _s("brokerUrl"),
+        _f("searchesTotal"),
+        _f("matchesTotal"),
+        _f("fetchesTotal"),
+        _f("failoversTotal"),
+        _f("stragglerSwitchesTotal"),
+    ),
+    may=(
+        _f("batchSelectsTotal"),
+        _f("snapshotBuilds"),
+        _f("snapshotReuses"),
+        _f("planCacheHits"),
+        _f("planCacheMisses"),
+        _f("planCacheHitRate"),
+        _f("auditRecords"),
+    ),
+)
+
+#: One metric series (family × label set) — the full registry, drillable
+#: the way SourceTransferBandwidth children hang under TransferBandwidth.
+BROKER_METRIC = ObjectClass(
+    name="Grid::Broker::Metric",
+    rdn="gbm",
+    subclass_of="Grid::Broker::Telemetry",
+    child_of=(
+        "Grid::Broker::Telemetry",
+        "Grid::organizationalUnit",
+        "Grid::organization",
+        "Grid::Top",
+    ),
+    must=(_s("metricName"), _s("metricType"), _f("metricValue")),
+    may=(_s("metricLabels"), _f("sampleCount"), _f("sampleSum")),
+)
+
+
+def _project(entry: Entry, attrs: Optional[Sequence[str]]) -> Entry:
+    if attrs is None:
+        return dict(entry)
+    want = {a.lower() for a in attrs} | {"dn", "objectclass"}
+    return {k: v for k, v in entry.items() if k.lower() in want}
+
+
+class BrokerTelemetryGRIS:
+    """A GRIS-shaped information server over one broker's telemetry.
+
+    Duck-types the :class:`~repro.core.gris.StorageGRIS` surface a GIIS
+    needs (``entries()``/``search()``/``to_ldif()``), so
+    ``giis.register(name, publisher)`` makes broker health discoverable
+    alongside storage resources. Entries are materialized per query from
+    the live registry (shell-backend semantics: always current).
+    """
+
+    def __init__(
+        self,
+        dn: str,
+        broker: Any,  # repro.core.broker.DataBroker
+        *,
+        clock: Optional[Clock] = None,
+        validate: bool = True,
+        max_metric_entries: int = 256,
+    ):
+        self.dn = dn
+        self.broker = broker
+        self.clock = clock or getattr(broker, "clock", None) or Clock()
+        self.validate = validate
+        self.max_metric_entries = int(max_metric_entries)
+        self.query_count = 0
+
+    # ------------------------------------------------------ materialization
+    def telemetry_entry(self) -> Entry:
+        stats = self.broker.stats
+        pc = self.broker.plan_cache.stats
+        lookups = pc["hits"] + pc["misses"] + pc["negative_hits"]
+        entry: Entry = {
+            "dn": self.dn,
+            "objectClass": BROKER_TELEMETRY.name,
+            "brokerUrl": self.broker.client_url,
+            "searchesTotal": float(stats.get("searches", 0)),
+            "matchesTotal": float(stats.get("matches", 0)),
+            "fetchesTotal": float(stats.get("fetches", 0)),
+            "failoversTotal": float(stats.get("failovers", 0)),
+            "stragglerSwitchesTotal": float(stats.get("straggler_switches", 0)),
+            "batchSelectsTotal": float(stats.get("batch_selects", 0)),
+            "snapshotBuilds": float(stats.get("snapshot_builds", 0)),
+            "snapshotReuses": float(stats.get("snapshot_reuses", 0)),
+            "planCacheHits": float(pc["hits"]),
+            "planCacheMisses": float(pc["misses"]),
+            "planCacheHitRate": float(pc["hits"] / lookups) if lookups else 0.0,
+            "auditRecords": float(len(self.broker.audit)),
+        }
+        if self.validate:
+            validate_entry(entry, BROKER_TELEMETRY)
+        return entry
+
+    def metric_entries(self) -> List[Entry]:
+        """One child entry per metric series in the broker's registry."""
+        out: List[Entry] = []
+        for name, labels, metric in self.broker.metrics.samples():
+            if len(out) >= self.max_metric_entries:
+                break
+            label_str = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+            rdn_label = f"{name}{{{label_str}}}" if label_str else name
+            entry: Entry = {
+                "dn": f"gbm={rdn_label}, {self.dn}",
+                "objectClass": BROKER_METRIC.name,
+                "metricName": name,
+                "metricType": metric.kind,
+            }
+            if label_str:
+                entry["metricLabels"] = label_str
+            if metric.kind == "histogram":
+                entry["metricValue"] = float(metric.mean)
+                entry["sampleCount"] = float(metric.count)
+                entry["sampleSum"] = float(metric.sum)
+            else:
+                entry["metricValue"] = float(metric.value)
+            if self.validate:
+                validate_entry(entry, BROKER_METRIC)
+            out.append(entry)
+        return out
+
+    def entries(self) -> List[Entry]:
+        """The full telemetry subtree, parent-first (the GIIS snapshot)."""
+        return [self.telemetry_entry()] + self.metric_entries()
+
+    # --------------------------------------------------------------- search
+    def search(
+        self,
+        flt: Optional["Filter | str"] = None,
+        attrs: Optional[Sequence[str]] = None,
+    ) -> List[Entry]:
+        self.query_count += 1
+        if isinstance(flt, str):
+            flt = parse_filter(flt)
+        out: List[Entry] = []
+        for entry in self.entries():
+            if flt is None or flt.matches(entry):
+                out.append(_project(entry, attrs))
+        return out
+
+    def to_ldif(self) -> str:
+        return ldif_dumps(self.entries())

@@ -1,0 +1,181 @@
+"""Tracing spans: nested timing scopes exportable as Chrome trace events.
+
+A :class:`Tracer` hands out :class:`Span` scopes via a context manager or
+decorator; spans nest (parent/child through an explicit stack, no
+thread-locals — the repo is single-controller per host) and the finished
+buffer exports as Chrome ``traceEvents`` JSON, loadable in Perfetto or
+``chrome://tracing``.
+
+Around kernel dispatch the tracer can additionally enter a
+``jax.profiler.TraceAnnotation`` so spans line up with XLA's own traces
+(``jax_annotations=True``); the passthrough is best-effort and degrades
+to a no-op when the profiler is unavailable.
+
+The span buffer is bounded (``max_spans``): a serving process tracing
+every batch keeps the most recent window instead of growing without
+bound.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Any, Callable, Deque, Dict, Iterator, List, Optional
+
+__all__ = ["Span", "Tracer"]
+
+
+class Span:
+    """One timing scope. ``duration`` is valid after the scope exits."""
+
+    __slots__ = ("name", "span_id", "parent_id", "depth", "t0", "t1", "args")
+
+    def __init__(self, name: str, span_id: int, parent_id: Optional[int],
+                 depth: int, t0: float, args: Dict[str, Any]):
+        self.name = name
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.depth = depth
+        self.t0 = t0
+        self.t1: Optional[float] = None
+        self.args = args
+
+    @property
+    def duration(self) -> float:
+        return (self.t1 - self.t0) if self.t1 is not None else 0.0
+
+    def set(self, **kv: Any) -> None:
+        """Attach result attributes mid-scope (batch sizes, cache hits)."""
+        self.args.update(kv)
+
+    def to_event(self, epoch: float) -> Dict[str, Any]:
+        """Chrome trace-event 'complete' (ph=X) form, µs timestamps."""
+        return {
+            "name": self.name,
+            "cat": "repro",
+            "ph": "X",
+            "ts": (self.t0 - epoch) * 1e6,
+            "dur": self.duration * 1e6,
+            "pid": 0,
+            "tid": self.depth,
+            "args": {"span_id": self.span_id,
+                     "parent_id": self.parent_id,
+                     **{k: _jsonable(v) for k, v in self.args.items()}},
+        }
+
+
+def _jsonable(v: Any) -> Any:
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return repr(v)
+
+
+class Tracer:
+    """Span factory + bounded buffer of finished spans.
+
+    Parameters
+    ----------
+    time_fn:
+        Timestamp source; defaults to ``time.perf_counter``. Inject a
+        deterministic clock's ``now`` for reproducible traces in tests.
+    jax_annotations:
+        Also enter ``jax.profiler.TraceAnnotation(name)`` for every span
+        — used around kernel dispatch so broker spans appear inside
+        ``jax.profiler`` traces.
+    max_spans:
+        Finished-span ring-buffer capacity.
+    """
+
+    def __init__(
+        self,
+        *,
+        time_fn: Optional[Callable[[], float]] = None,
+        jax_annotations: bool = False,
+        max_spans: int = 8192,
+    ):
+        self.time_fn = time_fn or time.perf_counter
+        self.jax_annotations = bool(jax_annotations)
+        self._spans: Deque[Span] = deque(maxlen=int(max_spans))
+        self._stack: List[Span] = []
+        self._next_id = 1
+        self.epoch = self.time_fn()
+        self.dropped = 0
+
+    # ------------------------------------------------------------- scoping
+    @contextmanager
+    def span(self, name: str, **args: Any) -> Iterator[Span]:
+        parent = self._stack[-1] if self._stack else None
+        s = Span(
+            name,
+            self._next_id,
+            parent.span_id if parent else None,
+            len(self._stack),
+            self.time_fn(),
+            dict(args),
+        )
+        self._next_id += 1
+        self._stack.append(s)
+        annotation = None
+        if self.jax_annotations:
+            try:
+                from jax.profiler import TraceAnnotation
+
+                annotation = TraceAnnotation(name)
+                annotation.__enter__()
+            except Exception:
+                annotation = None
+        try:
+            yield s
+        finally:
+            if annotation is not None:
+                annotation.__exit__(None, None, None)
+            s.t1 = self.time_fn()
+            self._stack.pop()
+            if len(self._spans) == self._spans.maxlen:
+                self.dropped += 1
+            self._spans.append(s)
+
+    def trace(self, name: Optional[str] = None) -> Callable:
+        """Decorator form: ``@tracer.trace("phase")``."""
+
+        def deco(fn: Callable) -> Callable:
+            span_name = name or fn.__qualname__
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                with self.span(span_name):
+                    return fn(*a, **kw)
+
+            return wrapper
+
+        return deco
+
+    # ------------------------------------------------------------- reading
+    def spans(self, name: Optional[str] = None) -> List[Span]:
+        if name is None:
+            return list(self._spans)
+        return [s for s in self._spans if s.name == name]
+
+    def clear(self) -> None:
+        self._spans.clear()
+        self.dropped = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self._stack)
+
+    # -------------------------------------------------------------- export
+    def export_chrome(self) -> Dict[str, Any]:
+        """Chrome/Perfetto ``traceEvents`` JSON object."""
+        return {
+            "displayTimeUnit": "ms",
+            "traceEvents": [s.to_event(self.epoch) for s in self._spans],
+        }
+
+    def dump_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.export_chrome(), f, indent=2)
+            f.write("\n")

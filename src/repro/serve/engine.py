@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer
+from repro.obs import MetricsRegistry, Tracer
 
 __all__ = ["ServeEngine", "GenerationResult"]
 
@@ -44,7 +45,16 @@ class GenerationResult:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params: Any, *, max_seq: int = 4096, eos_id: int = 2):
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Any,
+        *,
+        max_seq: int = 4096,
+        eos_id: int = 2,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
+    ):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -56,6 +66,17 @@ class ServeEngine:
             lambda p, t, c, s: transformer.decode_step(p, t, c, s, cfg)
         )
         self.selection_stats: Dict[str, Any] = {}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._h_prefill = self.metrics.histogram(
+            "serve_prefill_seconds", "prompt prefill wall time per generate()"
+        )
+        self._h_decode = self.metrics.histogram(
+            "serve_decode_seconds", "lockstep decode wall time per generate()"
+        )
+        self._c_tokens = self.metrics.counter(
+            "serve_generated_tokens_total", "tokens emitted across generate() calls"
+        )
 
     @classmethod
     def from_grid(
@@ -79,7 +100,16 @@ class ServeEngine:
 
         scheduler = BatchScheduler(manager.broker, max_batch=max_batch)
         params = manager.restore(step, template, scheduler=scheduler)
-        engine = cls(cfg, params, max_seq=max_seq, eos_id=eos_id)
+        # one registry/tracer across broker, scheduler, and engine: the
+        # whole serve path shows up in a single exposition / trace
+        engine = cls(
+            cfg,
+            params,
+            max_seq=max_seq,
+            eos_id=eos_id,
+            metrics=manager.broker.metrics,
+            tracer=manager.broker.tracer,
+        )
         engine.selection_stats = {
             **scheduler.stats,
             "coalescing_ratio": scheduler.coalescing_ratio(),
@@ -94,38 +124,42 @@ class ServeEngine:
         max_new: int = 32,
         extras: Optional[Dict[str, np.ndarray]] = None,
     ) -> GenerationResult:
-        import time
-
         b, s = prompts.shape
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
 
-        t0 = time.perf_counter()
-        logits, caches = self._prefill(self.params, batch)
-        jax.block_until_ready(logits)
-        t1 = time.perf_counter()
+        with self.tracer.span("serve.generate", batch=b, prompt_len=s) as gen_span:
+            with self.tracer.span("serve.prefill") as prefill_span:
+                logits, caches = self._prefill(self.params, batch)
+                jax.block_until_ready(logits)
 
-        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
-        out = [np.asarray(tokens)]
-        done = np.asarray(tokens) == self.eos_id
-        pos = jnp.full((b,), s, jnp.int32)
-        n_gen = np.ones((b,), np.int32)
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
+            out = [np.asarray(tokens)]
+            done = np.asarray(tokens) == self.eos_id
+            pos = jnp.full((b,), s, jnp.int32)
+            n_gen = np.ones((b,), np.int32)
 
-        for i in range(max_new - 1):
-            logits, caches = self._decode(self.params, tokens[:, None], caches, pos)
-            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            t_np = np.asarray(tokens)
-            out.append(np.where(done, self.eos_id, t_np))
-            n_gen += (~done).astype(np.int32)
-            done |= t_np == self.eos_id
-            pos = pos + 1
-            if done.all():
-                break
-        t2 = time.perf_counter()
+            with self.tracer.span("serve.decode", max_new=max_new) as decode_span:
+                for i in range(max_new - 1):
+                    logits, caches = self._decode(
+                        self.params, tokens[:, None], caches, pos
+                    )
+                    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    t_np = np.asarray(tokens)
+                    out.append(np.where(done, self.eos_id, t_np))
+                    n_gen += (~done).astype(np.int32)
+                    done |= t_np == self.eos_id
+                    pos = pos + 1
+                    if done.all():
+                        break
+            gen_span.set(generated=int(n_gen.sum()))
+        self._h_prefill.observe(prefill_span.duration)
+        self._h_decode.observe(decode_span.duration)
+        self._c_tokens.inc(int(n_gen.sum()))
         return GenerationResult(
             tokens=np.stack(out, axis=1),
             n_generated=n_gen,
-            prefill_s=t1 - t0,
-            decode_s=t2 - t1,
+            prefill_s=prefill_span.duration,
+            decode_s=decode_span.duration,
         )

@@ -67,6 +67,7 @@ class BatchScheduler:
         top_k: Optional[int] = None,
         use_kernel: Optional[bool] = None,
         clock=None,
+        metrics=None,
     ):
         self.broker = broker
         self.max_batch = int(max_batch)
@@ -83,6 +84,27 @@ class BatchScheduler:
             "size_flushes": 0,
             "max_batch_seen": 0,
         }
+        # obs: share the broker's registry/tracer unless told otherwise;
+        # self.stats stays the source of truth for exact-count consumers
+        self.metrics = metrics if metrics is not None else broker.metrics
+        self.tracer = broker.tracer
+        self._c_submitted = self.metrics.counter(
+            "scheduler_submitted_total", "selections queued"
+        )
+        self._c_flush = {
+            reason: self.metrics.counter(
+                "scheduler_flushes_total", "queue flushes by trigger", reason=reason
+            )
+            for reason in ("size", "latency", "forced")
+        }
+        self._g_queue = self.metrics.gauge(
+            "scheduler_queue_depth", "selections currently queued"
+        )
+        self._h_batch = self.metrics.histogram(
+            "scheduler_coalesced_batch_size",
+            "selections per select_many flush",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, float("inf")),
+        )
 
     # ----------------------------------------------------------- submission
     def submit(self, lfn: str, request: Optional[ClassAd] = None) -> SelectionTicket:
@@ -92,9 +114,11 @@ class BatchScheduler:
             self._oldest_at = self.clock.now()
         self._pending.append((lfn, request, ticket))
         self.stats["submitted"] += 1
+        self._c_submitted.inc()
+        self._g_queue.set(len(self._pending))
         if len(self._pending) >= self.max_batch:
             self.stats["size_flushes"] += 1
-            self.flush()
+            self.flush(reason="size")
         return ticket
 
     def submit_many(
@@ -112,24 +136,31 @@ class BatchScheduler:
         waited ``max_delay``. Returns True if a flush happened."""
         if self._pending and self.clock.now() - self._oldest_at >= self.max_delay:
             self.stats["latency_flushes"] += 1
-            self.flush()
+            self.flush(reason="latency")
             return True
         return False
 
-    def flush(self) -> None:
-        """Run every queued selection as one ``select_many`` batch."""
+    def flush(self, *, reason: str = "forced") -> None:
+        """Run every queued selection as one ``select_many`` batch.
+
+        ``reason`` labels the flush trigger ("size" | "latency" |
+        "forced") in the metrics registry; submit/poll pass theirs."""
         if not self._pending:
             return
         batch, self._pending = self._pending, []
         self._oldest_at = None
         self.stats["batches"] += 1
         self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"], len(batch))
-        outcomes = self.broker.select_many(
-            [(lfn, req) for lfn, req, _ in batch],
-            top_k=self.top_k,
-            use_kernel=self.use_kernel,
-            strict=False,
-        )
+        self._c_flush.get(reason, self._c_flush["forced"]).inc()
+        self._h_batch.observe(len(batch))
+        self._g_queue.set(0)
+        with self.tracer.span("scheduler.flush", batch=len(batch), reason=reason):
+            outcomes = self.broker.select_many(
+                [(lfn, req) for lfn, req, _ in batch],
+                top_k=self.top_k,
+                use_kernel=self.use_kernel,
+                strict=False,
+            )
         for (_, _, ticket), outcome in zip(batch, outcomes):
             ticket._fill(outcome)
 

@@ -172,10 +172,10 @@ class DataGrid:
             client_url, self.catalog, self.gris_for, clock=self.clock, **kwargs
         )
 
-    def transfer_service(self):
+    def transfer_service(self, *, metrics=None):
         from .transfer import SimulatedTransferService
 
-        return SimulatedTransferService(self)
+        return SimulatedTransferService(self, metrics=metrics)
 
     # -- replication helpers ------------------------------------------------
     def store_replica(self, lfn: str, endpoint_url: str, data: bytes, path: Optional[str] = None) -> PhysicalFile:

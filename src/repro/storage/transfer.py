@@ -48,26 +48,71 @@ class SimulatedTransferService:
     """Implements the broker's :class:`~repro.core.broker.TransferService`
     protocol against a :class:`DataGrid`."""
 
-    def __init__(self, grid: DataGrid, config: Optional[TransferConfig] = None):
+    def __init__(
+        self,
+        grid: DataGrid,
+        config: Optional[TransferConfig] = None,
+        *,
+        metrics: Any = None,
+    ):
         self.grid = grid
         self.config = config or TransferConfig()
         self.transfer_count = 0
         self.bytes_moved = 0
+        # optional obs registry (usually the owning broker's): per-op
+        # transfer/byte counters, fault counters, effective-bandwidth
+        # histogram over simulated wall time
+        self.metrics = metrics
+        if metrics is not None:
+            self._c_transfers = {
+                op: metrics.counter(
+                    "transfer_total", "completed transfers by direction", op=op
+                )
+                for op in ("read", "write")
+            }
+            self._c_bytes = {
+                op: metrics.counter(
+                    "transfer_bytes_total", "payload bytes moved by direction", op=op
+                )
+                for op in ("read", "write")
+            }
+            self._c_faults = metrics.counter(
+                "transfer_faults_total", "refused/dropped/died transfer attempts"
+            )
+            self._h_bw = metrics.histogram(
+                "transfer_effective_bandwidth_mb_per_s",
+                "achieved bandwidth per completed transfer (simulated time)",
+                buckets=(0.1, 0.5, 1, 2, 5, 10, 25, 50, 100, 250, 1000, float("inf")),
+            )
+
+    def _record(self, op: str, nbytes: int, seconds: float) -> None:
+        self.transfer_count += 1
+        self.bytes_moved += nbytes
+        if self.metrics is not None:
+            self._c_transfers[op].inc()
+            self._c_bytes[op].inc(nbytes)
+            if seconds > 0:
+                self._h_bw.observe(nbytes / seconds / 1e6)
+
+    def _fault(self, msg: str) -> "TransferFailure":
+        if self.metrics is not None:
+            self._c_faults.inc()
+        return TransferFailure(msg)
 
     # -- internal -----------------------------------------------------------
     def _endpoint(self, url: str) -> StorageEndpoint:
         ep = self.grid.endpoints.get(url)
         if ep is None:
-            raise TransferFailure(f"unknown endpoint {url}")
+            raise self._fault(f"unknown endpoint {url}")
         if not ep.alive:
-            raise TransferFailure(f"endpoint {url} is down")
+            raise self._fault(f"endpoint {url} is down")
         return ep
 
     def _maybe_flake(self, ep: StorageEndpoint) -> None:
         if ep.flaky_rate > 0:
             ep._flaky_counter += 1
             if _stable_unit(ep.url, "flake", str(ep._flaky_counter)) < ep.flaky_rate:
-                raise TransferFailure(f"endpoint {ep.url} dropped the connection")
+                raise self._fault(f"endpoint {ep.url} dropped the connection")
 
     def _stream_utilization(self) -> float:
         """Path utilization with n parallel streams: a single stream only
@@ -126,14 +171,13 @@ class SimulatedTransferService:
                     break
                 # endpoint may die mid-transfer (fault injection)
                 if not ep.alive:
-                    raise TransferFailure(f"endpoint {ep.url} died mid-transfer")
+                    raise self._fault(f"endpoint {ep.url} died mid-transfer")
                 self._maybe_flake(ep)
         finally:
             ep.active_transfers -= 1
         # server-side instrumentation (§3.2): read = replica -> client
         ep.monitor.observe_transfer("read", client_url, total, max(elapsed, 1e-9), t0)
-        self.transfer_count += 1
-        self.bytes_moved += total
+        self._record("read", total, elapsed)
 
     # -- writes ----------------------------------------------------------------
     def write(
@@ -153,6 +197,5 @@ class SimulatedTransferService:
         finally:
             ep.active_transfers -= 1
         ep.monitor.observe_transfer("write", client_url, len(data), max(seconds, 1e-9), t0)
-        self.transfer_count += 1
-        self.bytes_moved += len(data)
+        self._record("write", len(data), seconds)
         return len(data), seconds

@@ -14,7 +14,6 @@ the other hosts' step times are modelled for the straggler monitor.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
@@ -25,6 +24,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint.restore import resume_or_init
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import DataPipeline
+from repro.obs import MetricsRegistry, Tracer
 from repro.storage.faults import FaultInjector
 
 from .straggler import StragglerMonitor
@@ -73,6 +73,18 @@ class TrainLoop:
         self.records: List[StepRecord] = []
         self.events: List[str] = []
         self._step_fn = jax.jit(make_train_step(cfg, tc))
+        # obs: share the pipeline broker's registry/tracer so data-grid and
+        # training metrics land in one exposition
+        self.metrics: MetricsRegistry = pipeline.broker.metrics
+        self.tracer: Tracer = pipeline.broker.tracer
+        self._c_steps = self.metrics.counter("train_steps_total", "optimizer steps")
+        self._c_ckpts = self.metrics.counter(
+            "train_checkpoints_total", "checkpoints written by the loop"
+        )
+        self._h_step = self.metrics.histogram(
+            "train_step_seconds", "wall time per optimizer step"
+        )
+        self._g_loss = self.metrics.gauge("train_loss", "most recent step loss")
 
     # ------------------------------------------------------------------ state
     def init_or_resume(self) -> tuple[TrainState, int]:
@@ -102,11 +114,16 @@ class TrainLoop:
                 batches = self.pipeline.batches(epoch)
                 batch = next(batches)
 
-            t0 = time.perf_counter()
-            state, metrics = self._step_fn(state, {k: jax.numpy.asarray(v) for k, v in batch.items()})
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
+            with self.tracer.span("train.step", step=step + 1) as step_span:
+                state, metrics = self._step_fn(
+                    state, {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                )
+                loss = float(metrics["loss"])
+            dt = step_span.duration
             step += 1
+            self._c_steps.inc()
+            self._h_step.observe(dt)
+            self._g_loss.set(loss)
 
             self.records.append(
                 StepRecord(step, loss, dt, {k: float(v) for k, v in metrics.items()})
@@ -119,7 +136,9 @@ class TrainLoop:
                 self.events.append(f"step {step}: loss={loss:.4f} ({dt*1e3:.0f} ms)")
 
             if self.ckpt is not None and step % self.lc.checkpoint_every == 0:
-                self.ckpt.save(step, state, blocking=not self.lc.async_checkpoint)
+                with self.tracer.span("train.checkpoint", step=step):
+                    self.ckpt.save(step, state, blocking=not self.lc.async_checkpoint)
+                self._c_ckpts.inc()
                 self.events.append(f"checkpoint@{step}")
             if (
                 self.ckpt is not None

@@ -12,6 +12,8 @@ from repro.models import transformer as T
 from repro.train.optim import AdamWConfig
 from repro.train.train_step import TrainConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = [
     "granite-20b",
     "mistral-nemo-12b",

@@ -81,10 +81,17 @@ class TestKernelVsRef:
         if mk.any():
             np.testing.assert_allclose(bsk, bsr, rtol=1e-6)
 
+    @pytest.mark.filterwarnings("error")
     @pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
     def test_dtype_coercion(self, dtype):
         rng = np.random.default_rng(0)
         attrs, valid = random_cols(rng, 128)
+        if np.issubdtype(dtype, np.integer):
+            # clip into the target's representable range before the cast;
+            # float32 spacing at 2^31 is 256, so clipping to exactly
+            # info.max would round back out of range — leave headroom
+            info = np.iinfo(dtype)
+            attrs = np.clip(attrs, info.min, info.max - 1024)
         attrs = attrs.astype(dtype)
         plan = lower_request(REQUEST, NAMES)
         mk, sk, _, bik = matchrank(np.asarray(attrs, np.float32), valid, plan)

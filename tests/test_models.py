@@ -12,6 +12,8 @@ from repro.models.attention import _dense_attention, _flash_attention
 from repro.models.layers import chunked_cross_entropy, cross_entropy
 from repro.models.moe import apply_moe, capacity, init_moe
 
+pytestmark = pytest.mark.slow
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("window", [None, 700])

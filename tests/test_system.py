@@ -9,6 +9,7 @@ the surviving replicas."""
 
 import jax
 import numpy as np
+import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import get_arch
@@ -20,6 +21,8 @@ from repro.storage.faults import FaultEvent, FaultInjector
 from repro.train.loop import LoopConfig, TrainLoop
 from repro.train.optim import AdamWConfig
 from repro.train.train_step import TrainConfig
+
+pytestmark = pytest.mark.slow
 
 
 def test_end_to_end_grid_training_with_faults():

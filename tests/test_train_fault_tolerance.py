@@ -23,6 +23,8 @@ from repro.train.optim import AdamWConfig, adamw_update, init_adamw, warmup_cosi
 from repro.train.straggler import StragglerMonitor
 from repro.train.train_step import TrainConfig
 
+pytestmark = pytest.mark.slow
+
 
 def build_env(seed=3, shards=8, tokens=30_000):
     cfg = get_arch("h2o-danube3-4b").reduced()
