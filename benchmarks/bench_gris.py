@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core.giis import GIIS
 from repro.core.gris import Clock
+from repro.core.transferplan import TransferRequest
 from repro.storage.endpoint import build_demo_grid
 
 
@@ -27,7 +28,7 @@ def run():
     for i, ep in enumerate(grid.alive_endpoints()[:16]):
         grid.store_replica(f"warm-{i}", ep, data)
         pfn = grid.catalog.lookup(f"warm-{i}")[0]
-        grid.transfer_service().read(pfn, "client://c")
+        grid.transfer_service().transfer(TransferRequest(pfn, "client://c"))
 
     ep0 = grid.endpoints[grid.alive_endpoints()[0]]
     # Model the paper's shell-backend cost: the OpenLDAP backends exec'd

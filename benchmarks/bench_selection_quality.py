@@ -19,6 +19,7 @@ is checked by benchmarks/run.py (predicted ≥ random required).
 import numpy as np
 
 from repro.core.broker import default_read_request
+from repro.core.transferplan import TransferRequest
 from repro.storage.endpoint import build_demo_grid
 
 N_FETCH = 60
@@ -40,12 +41,12 @@ def _run_policy(policy: str, seed: int) -> float:
         if policy == "random":
             rng = np.random.default_rng(seed * 1000 + i)
             pfn = replicas[int(rng.integers(0, len(replicas)))]
-            payload, n, secs = xfer.read(pfn, "client://host")
-            bws.append(n / secs)
+            res = xfer.transfer(TransferRequest(pfn, "client://host"))
+            bws.append(res.bandwidth)
         elif policy == "round_robin":
             pfn = replicas[i % len(replicas)]
-            payload, n, secs = xfer.read(pfn, "client://host")
-            bws.append(n / secs)
+            res = xfer.transfer(TransferRequest(pfn, "client://host"))
+            bws.append(res.bandwidth)
         else:
             req = default_read_request("client://host", rank={
                 "static": "static", "last": "last", "predicted": "predicted",

@@ -1,0 +1,110 @@
+"""Resilient access-layer benchmark: striped+hedged plans under faults.
+
+Replays the acceptance scenario for the resilient transfer service on a
+four-replica single-zone grid (comparable paths — the setting where
+striping pays):
+
+  * fault-free striped fetch vs the legacy single-source read,
+  * one stripe source killed *mid-transfer* (injector ticks on every
+    simulated-clock advance) plus another degraded 4x: the striped read
+    must complete correct bytes within 1.5x the fault-free simulated
+    wall time (claim check in run.py), while the legacy single-source
+    read of the killed replica raises TransferFailure.
+
+derived = simulated MB/s for throughput rows, ratio for the inflation
+row, 0/1 for the legacy-failure row.
+"""
+
+import time
+
+from repro.core.transferplan import TransferFailure, TransferRequest
+from repro.storage.endpoint import DataGrid
+from repro.storage.faults import FaultEvent, FaultInjector
+
+DATA = b"b" * (32 << 20)
+EPS = [f"gsiftp://bench{i}" for i in range(4)]
+
+
+def _build(seed=5):
+    g = DataGrid(seed=seed)
+    for url in EPS:
+        g.add_endpoint(url, zone="zoneA")
+    g.add_client("client://bench", zone="zoneA")
+    g.replicate("bulk", DATA, EPS)
+    broker = g.broker_for("client://bench")
+    svc = g.resilient_transfer_service(broker)
+    return g, broker, svc
+
+
+def _timed_fetch(svc, lfn="bulk"):
+    w0 = time.perf_counter()
+    res = svc.fetch(lfn)
+    return res, (time.perf_counter() - w0) * 1e6
+
+
+def run():
+    rows = []
+
+    # -- fault-free: striped vs legacy single-source -------------------------
+    g, broker, svc = _build()
+    svc.fetch("bulk")  # warm per-source history → predictions
+    res, us = _timed_fetch(svc)
+    assert res.payload == DATA
+    s_free = res.seconds
+    rows.append(("transfer_striped_healthy_MBps", us, res.bandwidth / 1e6))
+
+    g2, broker2, _ = _build()
+    xfer = g2.transfer_service()
+    pfn = g2.catalog.lookup("bulk")[0]
+    xfer.transfer(TransferRequest(pfn, "client://bench"))  # same warm count
+    single = xfer.transfer(TransferRequest(pfn, "client://bench"))
+    rows.append(("transfer_single_source_MBps", 0.0, single.bandwidth / 1e6))
+    rows.append(
+        ("transfer_striped_vs_single_speedup", 0.0, single.seconds / s_free)
+    )
+
+    # -- faulted: kill one source mid-transfer, degrade another 4x ------------
+    g3, broker3, svc3 = _build()
+    inj = FaultInjector(g3)
+    svc3.on_advance = inj.tick
+    warm = svc3.fetch("bulk")
+    contrib = sorted(
+        warm.per_replica, key=lambda u: (warm.per_replica[u], u), reverse=True
+    )
+    slow_ep, kill_ep = contrib[0], contrib[1]
+    g3.endpoints[slow_ep].degradation = 0.25
+    inj.schedule_event(
+        FaultEvent(g3.clock.now() + 0.25 * s_free, "kill", kill_ep)
+    )
+    faulted, us_f = _timed_fetch(svc3)
+    assert faulted.payload == DATA, "striped read corrupted under faults"
+    assert not g3.endpoints[kill_ep].alive, "kill did not land mid-transfer"
+    rows.append(("transfer_faulted_MBps", us_f, faulted.bandwidth / 1e6))
+    rows.append(("transfer_fault_inflation", 0.0, faulted.seconds / s_free))
+    rows.append(
+        (
+            "transfer_fault_recovery_events",
+            0.0,
+            float(
+                faulted.failovers
+                + faulted.hedges
+                + faulted.retries
+                + int(svc3._c_steals.value)
+            ),
+        )
+    )
+
+    # -- legacy single-source under the same kill: must fail ------------------
+    g4, _, _ = _build()
+    inj4 = FaultInjector(g4)
+    xfer4 = g4.transfer_service()
+    pfn4 = next(p for p in g4.catalog.lookup("bulk") if p.endpoint == kill_ep)
+    inj4.schedule_event(FaultEvent(g4.clock.now() + 0.05 * s_free, "kill", kill_ep))
+    legacy_failed = 0.0
+    try:
+        for _ev in xfer4.transfer_chunks(TransferRequest(pfn4, "client://bench")):
+            inj4.tick()
+    except TransferFailure:
+        legacy_failed = 1.0
+    rows.append(("transfer_legacy_fails_under_kill", 0.0, legacy_failed))
+    return rows

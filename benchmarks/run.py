@@ -8,7 +8,10 @@ checks the paper's qualitative claims hold quantitatively:
   * history-based selection beats blind/static selection (§3.2),
   * the adaptive predictor has bounded regret vs the per-trace best (§7),
   * the information plane's TTL caching pays (§3.1),
-  * the data plane survives failover/straggler injection.
+  * the data plane survives failover/straggler injection,
+  * striped+hedged TransferPlan execution holds <=1.5x fault-free wall
+    time under a mid-transfer kill + 4x degrade, where the legacy
+    single-source read fails outright.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <prefix>] [--json [PATH]]
 
@@ -57,6 +60,7 @@ def main() -> None:
         bench_pipeline,
         bench_predictors,
         bench_selection_quality,
+        bench_transfer,
     )
 
     modules = {
@@ -66,6 +70,7 @@ def main() -> None:
         "gris": bench_gris,
         "pipeline": bench_pipeline,
         "kernels": bench_kernels,
+        "transfer": bench_transfer,
     }
 
     from repro.obs import Tracer
@@ -108,6 +113,15 @@ def main() -> None:
             checks.append((f"adaptive regret bounded ({trace})", derived[k] <= 1.5))
     if "pipeline_failovers" in derived:
         checks.append(("pipeline survives endpoint death", derived["pipeline_failovers"] >= 0))
+    if "transfer_fault_inflation" in derived:
+        checks.append(("striped+hedged read <=1.5x fault-free time under kill+degrade",
+                       derived["transfer_fault_inflation"] <= 1.5))
+    if "transfer_legacy_fails_under_kill" in derived:
+        checks.append(("legacy single-source read dies where striped read survives",
+                       derived["transfer_legacy_fails_under_kill"] == 1.0))
+    if "transfer_striped_vs_single_speedup" in derived:
+        checks.append(("striping over comparable replicas beats single-source",
+                       derived["transfer_striped_vs_single_speedup"] >= 1.0))
 
     bad = [c for c, ok in checks if not ok]
     for c, ok in checks:

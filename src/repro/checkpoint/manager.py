@@ -69,11 +69,19 @@ class CheckpointManager:
         replication: int = 2,
         chunk_bytes: int = CHUNK_BYTES_DEFAULT,
         keep: int = 3,
+        resilient: bool = True,
     ):
         self.run_name = run_name
         self.grid = grid
         self.broker = broker
-        self.transfer = grid.transfer_service(metrics=broker.metrics)
+        # chunk reads go through the resilient access layer by default:
+        # a restore races the repair daemon against real failures, which
+        # is exactly the striped/hedged/breaker-gated path's home turf
+        self.resilient = resilient
+        if resilient:
+            self.transfer = grid.resilient_transfer_service(broker)
+        else:
+            self.transfer = grid.transfer_service(metrics=broker.metrics)
         self.replication = replication
         self.chunk_bytes = chunk_bytes
         self.keep = keep
@@ -198,6 +206,18 @@ class CheckpointManager:
         return max(steps) if steps else None
 
     def _fetch(self, lfn: str, ranked=None) -> bytes:
+        if self.resilient:
+            # a SelectionResult (e.g. a coalescing-scheduler ticket)
+            # carries an executable plan; execute it striped rather than
+            # walking the ranked list single-source
+            plan = getattr(ranked, "plan", None)
+            if plan is not None:
+                res = self.transfer.execute(plan)
+                self.broker.note_access(getattr(ranked, "request_id", None), res)
+                return res.payload
+            if ranked is None:
+                req = default_read_request(self.broker.client_url)
+                return self.transfer.fetch(lfn, req).payload
         if ranked is not None:
             out = self.broker.access(lfn, ranked, self.transfer)
         else:

@@ -24,8 +24,14 @@ def resume_or_init(
     *,
     mesh=None,
     spec_fn: Optional[Callable] = None,
+    scheduler=None,
 ) -> Tuple[Any, int, bool]:
-    """→ (state, start_step, resumed)."""
+    """→ (state, start_step, resumed).
+
+    ``scheduler`` (a BatchScheduler over the manager's broker) coalesces
+    every chunk's replica selection into batched kernel launches; the
+    resulting plans are then executed striped by the manager's resilient
+    transfer service."""
     step = manager.latest_step()
     if step is None:
         state = init_fn()
@@ -42,5 +48,7 @@ def resume_or_init(
             )
         return state, 0, False
     template = jax.eval_shape(init_fn)
-    state = manager.restore(step, template, mesh=mesh, spec_fn=spec_fn)
+    state = manager.restore(
+        step, template, mesh=mesh, spec_fn=spec_fn, scheduler=scheduler
+    )
     return state, step, True

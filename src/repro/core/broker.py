@@ -52,10 +52,17 @@ from .classads import (
 from .gris import Clock, StorageGRIS
 from .ldif import Entry, entry_to_classad
 from .matchmaker import Matchmaker, MatchResult
+from .transferplan import (
+    TransferFailure,
+    TransferPlan,
+    TransferRequest,
+    TransferResult,
+)
 
 __all__ = [
     "ReplicaView",
     "RankedReplica",
+    "SelectionResult",
     "FetchOutcome",
     "TransferService",
     "BrokerError",
@@ -168,6 +175,73 @@ class RankedReplica:
         return self.view.pfn
 
 
+class SelectionResult(Sequence):
+    """The one result shape every selection path produces.
+
+    ``select``, ``select_many`` and ``select_placements`` used to return
+    bare ``List[RankedReplica]`` — the caller had to hold the request id,
+    re-derive bandwidth predictions, and invent its own striping. A
+    SelectionResult *is* the ranked list (it iterates, indexes and
+    lengths like one, so ``sel[0].pfn`` keeps working) and additionally
+    carries:
+
+      * ``plan`` — the broker's :class:`TransferPlan` (primary + ranked
+        backups + predicted bandwidths + stripe bound), executable by
+        ``ResilientTransferService.execute``,
+      * ``request_id`` — the decision record to ``explain()`` /
+        annotate after access,
+      * ``scores`` — per-candidate (endpoint, rank, matched) fates.
+    """
+
+    __slots__ = ("ranked", "lfn", "request_id", "plan", "scores")
+
+    def __init__(
+        self,
+        ranked: Sequence[RankedReplica],
+        *,
+        lfn: Optional[str] = None,
+        request_id: Optional[str] = None,
+        plan: Optional[TransferPlan] = None,
+        scores: Optional[List[CandidateScore]] = None,
+    ):
+        self.ranked = list(ranked)
+        self.lfn = lfn
+        self.request_id = request_id
+        self.plan = plan
+        self.scores = scores or []
+
+    def __len__(self) -> int:
+        return len(self.ranked)
+
+    def __iter__(self):
+        return iter(self.ranked)
+
+    def __getitem__(self, i):
+        return self.ranked[i]
+
+    def __bool__(self) -> bool:
+        return bool(self.ranked)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, SelectionResult):
+            return self.ranked == other.ranked
+        if isinstance(other, list):
+            return self.ranked == other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        eps = [rr.pfn.endpoint for rr in self.ranked[:3]]
+        more = f", +{len(self.ranked) - 3}" if len(self.ranked) > 3 else ""
+        return (
+            f"SelectionResult({self.lfn!r}, ranked={eps}{more}, "
+            f"request_id={self.request_id!r})"
+        )
+
+    @property
+    def best(self) -> RankedReplica:
+        return self.ranked[0]
+
+
 @dataclass
 class FetchOutcome:
     """Access-phase product."""
@@ -189,14 +263,16 @@ class FetchOutcome:
 class TransferService(Protocol):
     """What the Access Phase needs from the storage layer (GridFTP stand-in).
 
-    ``read`` returns (payload, nbytes, seconds); it may raise
-    ``TransferFailure`` (endpoint dead / refused). ``read_chunks`` yields
-    ``(chunk_bytes, chunk_seconds)`` increments for straggler monitoring.
+    ``transfer`` executes one :class:`TransferRequest` and returns a
+    :class:`TransferResult`; it may raise ``TransferFailure`` (endpoint
+    dead / refused). ``transfer_chunks`` yields
+    :class:`~repro.core.transferplan.ChunkEvent` increments for
+    straggler monitoring and restart markers.
     """
 
-    def read(self, replica: PhysicalFile, client_url: str) -> Tuple[Any, int, float]: ...
+    def transfer(self, request: TransferRequest) -> TransferResult: ...
 
-    def read_chunks(self, replica: PhysicalFile, client_url: str): ...
+    def transfer_chunks(self, request: TransferRequest): ...
 
 
 def default_read_request(
@@ -234,10 +310,17 @@ def default_read_request(
         ad.set_expr("rank", "other.diskTransferRate / (1 + other.loadFactor)")
     else:
         ad.set_expr("rank", rank)  # caller-supplied expression
+    # two clauses: the bandwidth gate, and the resilient layer's circuit-
+    # breaker feedback — an endpoint whose breaker THIS client tripped
+    # publishes breakerOpenToSource=1 into our per-source GRIS view and is
+    # excluded from matchmaking until its half-open probe window (0.5,
+    # which passes the < 1 gate so the probe stays selectable).
     ad.set_expr(
         "requirements",
-        "isUndefined(other.MaxRDBandwidth) || my.reqdRDBandwidth <= 0"
-        " || other.MaxRDBandwidth >= my.reqdRDBandwidth",
+        "(isUndefined(other.MaxRDBandwidth) || my.reqdRDBandwidth <= 0"
+        " || other.MaxRDBandwidth >= my.reqdRDBandwidth)"
+        " && (isUndefined(other.breakerOpenToSource)"
+        " || other.breakerOpenToSource < 1)",
     )
     return ad
 
@@ -294,6 +377,7 @@ class DataBroker:
         straggler_factor: float = 0.35,
         straggler_patience: int = 3,
         max_attempts: int = 4,
+        stripe_k: int = 3,
         snapshot_ttl: float = 5.0,
         batch_use_kernel: bool = False,
         batch_use_sparse: bool = False,
@@ -314,6 +398,7 @@ class DataBroker:
         self.straggler_factor = straggler_factor
         self.straggler_patience = straggler_patience
         self.max_attempts = max_attempts
+        self.stripe_k = stripe_k  # TransferPlan stripe bound
         # batched-selection state: snapshot TTL mirrors the GRIS dynamic-
         # attribute TTL (stale columns would diverge from fresh LDAP reads)
         self.snapshot_ttl = snapshot_ttl
@@ -436,17 +521,52 @@ class DataBroker:
             return None
         return vectorized_match(request, views, env=self.env)
 
+    def _predicted_bandwidth(self, rr: RankedReplica) -> Optional[float]:
+        """The bandwidth we expect from a ranked replica. Only trust
+        ``rank`` as a prediction when it comes from observed history; a
+        cold static rank (disk rate) can exceed the achievable path
+        bandwidth several-fold. Cold endpoints fall back to this client's
+        own typical achieved bandwidth (local aggregate), if any."""
+        has_history = isinstance(
+            rr.view.entry.get("EwmaRDBandwidthToSource"), (int, float)
+        ) and rr.view.entry.get("EwmaRDBandwidthToSource", 0) > 0
+        if rr.rank > 0 and has_history:
+            return rr.rank
+        agg = self.local_monitor.aggregate["read"]
+        return agg.mean if agg.n >= 3 else None
+
+    def _result(
+        self,
+        lfn: str,
+        ranked: List[RankedReplica],
+        request_id: Optional[str],
+        scores: Optional[List[CandidateScore]] = None,
+    ) -> SelectionResult:
+        """Ranked list → SelectionResult, with the executable plan."""
+        plan = TransferPlan(
+            lfn=lfn,
+            replicas=[rr.pfn for rr in ranked],
+            ranks=[rr.rank for rr in ranked],
+            predicted=[self._predicted_bandwidth(rr) for rr in ranked],
+            stripe_k=self.stripe_k,
+            request_id=request_id,
+        )
+        return SelectionResult(
+            ranked, lfn=lfn, request_id=request_id, plan=plan, scores=scores
+        )
+
     def select(
         self,
         lfn: str,
         request: Optional[ClassAd] = None,
         *,
         top_k: Optional[int] = None,
-    ) -> List[RankedReplica]:
+    ) -> SelectionResult:
         """Search + Match in one call, best replica first.
 
-        Records a decision record; ``self.last_request_id`` names it and
-        :meth:`explain` retrieves it."""
+        Returns a :class:`SelectionResult` — iterable like the ranked
+        list, plus the executable ``plan`` and the ``request_id`` of the
+        decision record :meth:`explain` retrieves."""
         req = request if request is not None else default_read_request(self.client_url)
         rec = self.audit.begin(lfn, mode="select", at=self.clock.now())
         rec.top_k = top_k
@@ -461,7 +581,9 @@ class DataBroker:
         if not ranked:
             rec.error = "NoMatchError"
             raise NoMatchError(lfn)
-        return ranked[:top_k] if top_k else ranked
+        if top_k:
+            ranked = ranked[:top_k]
+        return self._result(lfn, ranked, rec.request_id, scores=rec.scores)
 
     def _select_impl(
         self, lfn: str, req: ClassAd
@@ -572,11 +694,11 @@ class DataBroker:
         :meth:`explain`) noting its kernel path, plan-cache and snapshot
         status, and per-candidate scores.
 
-        Returns one ranked list per query, in query order. With
-        ``strict=False``, a query that fails (no replicas / no match)
-        yields its exception object in place of a list instead of raising
-        — the coalescing scheduler path, where one bad request must not
-        poison the batch.
+        Returns one :class:`SelectionResult` per query, in query order.
+        With ``strict=False``, a query that fails (no replicas / no
+        match) yields its exception object in place of a result instead
+        of raising — the coalescing scheduler path, where one bad
+        request must not poison the batch.
         """
         use_kernel = self.batch_use_kernel if use_kernel is None else use_kernel
         use_sparse = self.batch_use_sparse if use_sparse is None else use_sparse
@@ -822,18 +944,23 @@ class DataBroker:
             recs[i].kernel_path = "batched_interp"
             self._ctr["batched_interp_requests"].inc()
 
-        # ---- finalize ----
+        # ---- finalize: every successful query becomes a SelectionResult ----
         for i in range(n):
             r = results[i]
-            if isinstance(r, list) and not r:
-                results[i] = NoMatchError(queries[i][0])
-                recs[i].error = "NoMatchError"
+            if isinstance(r, list):
+                if not r:
+                    results[i] = NoMatchError(queries[i][0])
+                    recs[i].error = "NoMatchError"
+                    continue
+                if top_k:
+                    r = r[:top_k]
+                results[i] = self._result(
+                    queries[i][0], r, recs[i].request_id, scores=recs[i].scores
+                )
         if strict:
             for r in results:
                 if isinstance(r, BrokerError):
                     raise r
-        if top_k:
-            results = [r[:top_k] if isinstance(r, list) else r for r in results]
         return results
 
     def _ranked_from_scores(
@@ -905,24 +1032,26 @@ class DataBroker:
     def access(
         self,
         lfn: str,
-        ranked: List[RankedReplica],
+        ranked: "SelectionResult | List[RankedReplica]",
         transfer: TransferService,
         *,
         monitor_stragglers: bool = True,
         request_id: Optional[str] = None,
     ) -> FetchOutcome:
         """Access Phase with failover and straggler mitigation, over a
-        pre-computed ranked list (e.g. from a batched ``select_many``).
+        pre-computed selection (e.g. from a batched ``select_many``).
 
         Walks the ranked list; a failed endpoint advances to the next
         (failover); a transfer whose observed chunk bandwidth stays below
         ``straggler_factor × predicted`` for ``straggler_patience`` chunks
         is abandoned mid-flight and the next replica is tried.
 
-        The outcome annotates the selection's decision record — pass the
-        ``request_id`` the selection produced, or let the broker attach to
-        ``last_request_id`` when its lfn matches.
+        The outcome annotates the selection's decision record — a
+        :class:`SelectionResult` carries its own ``request_id``; a bare
+        list attaches to ``last_request_id`` when its lfn matches.
         """
+        if request_id is None and isinstance(ranked, SelectionResult):
+            request_id = ranked.request_id
         with self.tracer.span("broker.access", lfn=lfn):
             return self._access_impl(
                 lfn,
@@ -932,17 +1061,40 @@ class DataBroker:
                 request_id=request_id,
             )
 
+    def note_access(self, request_id: Optional[str], result: TransferResult) -> None:
+        """Annotate a selection's decision record with an access outcome
+        produced *outside* :meth:`access` — the resilient transfer
+        service executes the plan itself and reports back here. Also
+        feeds the client-side history monitor, keyed by the endpoint
+        that contributed the most bytes."""
+        self._ctr["fetches"].inc()
+        top = None
+        if result.per_replica:
+            top = max(result.per_replica.items(), key=lambda kv: (kv[1], kv[0]))[0]
+            self.local_monitor.observe_transfer(
+                "read", top, result.nbytes, result.seconds, self.clock.now()
+            )
+        self._h_fetch_bw.observe(result.bandwidth / 1e6)
+        if result.failovers:
+            self._ctr["failovers"].inc(result.failovers)
+        if request_id is not None and request_id in self.audit:
+            rec = self.audit.get(request_id)
+            rec.accessed = True
+            rec.fetched_from = top
+            rec.attempts = result.stripes + result.failovers
+            rec.failovers += result.failovers
+            rec.observed_bandwidth = result.bandwidth
+            rec.nbytes = int(result.nbytes)
+
     def _access_impl(
         self,
         lfn: str,
-        ranked: List[RankedReplica],
+        ranked: "SelectionResult | List[RankedReplica]",
         transfer: TransferService,
         *,
         monitor_stragglers: bool,
         request_id: Optional[str],
     ) -> FetchOutcome:
-        from repro.storage.transfer import TransferFailure  # cycle-free at runtime
-
         if not ranked:
             raise NoMatchError(lfn)
         rid = request_id or self.last_request_id
@@ -981,20 +1133,7 @@ class DataBroker:
             if attempts >= self.max_attempts:
                 break
             attempts += 1
-            # only trust `rank` as a bandwidth prediction when it comes from
-            # observed history; a cold static rank (disk rate) can exceed
-            # the achievable path bandwidth several-fold and would declare
-            # every healthy replica a straggler.
-            has_history = isinstance(
-                rr.view.entry.get("EwmaRDBandwidthToSource"), (int, float)
-            ) and rr.view.entry.get("EwmaRDBandwidthToSource", 0) > 0
-            if rr.rank > 0 and has_history:
-                predicted = rr.rank
-            else:
-                # cold endpoint: fall back to this client's own typical
-                # achieved bandwidth (local aggregate), if any
-                agg = self.local_monitor.aggregate["read"]
-                predicted = agg.mean if agg.n >= 3 else None
+            predicted = self._predicted_bandwidth(rr)
             try:
                 if monitor_stragglers and predicted:
                     result = self._monitored_read(transfer, rr, predicted)
@@ -1007,7 +1146,8 @@ class DataBroker:
                         continue
                     payload, nbytes, seconds = result
                 else:
-                    payload, nbytes, seconds = transfer.read(rr.pfn, self.client_url)
+                    res = transfer.transfer(TransferRequest(rr.pfn, self.client_url))
+                    payload, nbytes, seconds = res.payload, res.nbytes, res.seconds
             except TransferFailure as e:
                 errors.append(str(e))
                 self._ctr["failovers"].inc()
@@ -1021,7 +1161,8 @@ class DataBroker:
         for rr in abandoned:
             attempts += 1
             try:
-                payload, nbytes, seconds = transfer.read(rr.pfn, self.client_url)
+                res = transfer.transfer(TransferRequest(rr.pfn, self.client_url))
+                payload, nbytes, seconds = res.payload, res.nbytes, res.seconds
             except TransferFailure as e:
                 errors.append(str(e))
                 continue
@@ -1043,7 +1184,8 @@ class DataBroker:
         nbytes = 0
         seconds = 0.0
         slow = 0
-        for payload, cbytes, csecs in transfer.read_chunks(rr.pfn, self.client_url):
+        for ev in transfer.transfer_chunks(TransferRequest(rr.pfn, self.client_url)):
+            payload, cbytes, csecs = ev.payload, ev.nbytes, ev.seconds
             chunks.append(payload)
             nbytes += cbytes
             seconds += csecs
@@ -1065,9 +1207,12 @@ class DataBroker:
         *,
         k: int = 2,
         request: Optional[ClassAd] = None,
-    ) -> List[RankedReplica]:
+    ) -> SelectionResult:
         """Write-side matchmaking: choose ``k`` placement targets for a new
-        replica of size ``nbytes`` (checkpoint placement uses this)."""
+        replica of size ``nbytes`` (checkpoint placement uses this).
+        Returns the same :class:`SelectionResult` shape as the read path
+        (no transfer plan — writes create replicas, they don't stripe
+        reads over them)."""
         req = request if request is not None else default_write_request(self.client_url, nbytes)
         views: List[ReplicaView] = []
         for ep in endpoints:
@@ -1081,4 +1226,9 @@ class DataBroker:
         ranked = self.match(req, views)
         if len(ranked) < 1:
             raise NoMatchError(f"no endpoint admits a {nbytes}-byte replica")
-        return ranked[:k]
+        ranked = ranked[:k]
+        matched = {rr.pfn.endpoint: rr.rank for rr in ranked}
+        scores = [
+            CandidateScore(ep, matched.get(ep), ep in matched) for ep in endpoints
+        ]
+        return SelectionResult(ranked, lfn=f"<placement:{nbytes}B>", scores=scores)

@@ -116,6 +116,11 @@ class StorageGRIS:
         # TransferMonitor (core/bandwidth.py) via publish_* below.
         self._bw_summary: Optional[Dict[str, Any]] = None
         self._bw_sources: Dict[str, Dict[str, Any]] = {}
+        # per-source *health* attributes (circuit-breaker feedback from the
+        # resilient access layer) — kept apart from the bandwidth children
+        # so a TransferMonitor publish never wipes them, merged into the
+        # same per-source entry at materialization time
+        self._src_health: Dict[str, Dict[str, Any]] = {}
         self.query_count = 0  # instrumentation
         # optional obs registry (settable after construction: a broker can
         # attach its own to the GRISes it polls — see launch/serve.py)
@@ -173,6 +178,24 @@ class StorageGRIS:
             validate_entry(entry, SOURCE_TRANSFER_BANDWIDTH)
         self._bw_sources[source_url] = entry
 
+    def publish_source_health(self, source_url: str, attrs: Mapping[str, Any]) -> None:
+        """Merge client-observed health attributes (e.g. the resilient
+        layer's ``breakerOpenToSource``) into ``source_url``'s per-source
+        view — the feedback loop that lets that client's own matchmaking
+        avoid endpoints it has tripped a breaker on."""
+        self._src_health.setdefault(source_url, {}).update(attrs)
+
+    def _source_view(self, source_url: str) -> Optional[Dict[str, Any]]:
+        """Bandwidth child + health attrs for one source, merged."""
+        bw = self._bw_sources.get(source_url)
+        health = self._src_health.get(source_url)
+        if bw is None and health is None:
+            return None
+        merged: Dict[str, Any] = dict(bw or {"sourceUrl": source_url})
+        if health:
+            merged.update(health)
+        return merged
+
     # -- entry materialization -------------------------------------------------
     def volume_entry(self) -> Entry:
         now = self.clock.now()
@@ -196,12 +219,12 @@ class StorageGRIS:
 
     def source_entries(self) -> List[Entry]:
         out: List[Entry] = []
-        for src, attrs in sorted(self._bw_sources.items()):
+        for src in sorted(set(self._bw_sources) | set(self._src_health)):
             entry: Entry = {
                 "dn": f"gss=src-{src}, gss=bw, {self.dn}",
                 "objectClass": SOURCE_TRANSFER_BANDWIDTH.name,
             }
-            entry.update(attrs)
+            entry.update(self._source_view(src) or {})
             out.append(entry)
         return out
 
@@ -239,7 +262,7 @@ class StorageGRIS:
         if bw is not None:
             candidates.append(bw)
         if source is not None:
-            src = self._bw_sources.get(source)
+            src = self._source_view(source)
             if src is not None:
                 entry: Entry = {
                     "dn": f"gss=src-{source}, gss=bw, {self.dn}",

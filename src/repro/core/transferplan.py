@@ -1,0 +1,159 @@
+"""The shared transfer vocabulary: TransferRequest → TransferResult.
+
+The Access Phase used to speak in positional tuples — ``read(replica,
+client_url) -> (payload, nbytes, seconds)`` — which could not carry the
+things a resilient transfer produces: per-replica byte contributions,
+retries, hedges, stripe counts. This module is the one vocabulary the
+broker (core), the transfer services (storage) and every consumer
+(serve/checkpoint/data) now share:
+
+  * :class:`TransferRequest` — what to move (one replica's byte range,
+    stream parallelism), replacing the positional argument pair,
+  * :class:`ChunkEvent` — one chunk's worth of progress (straggler
+    monitoring, restart markers),
+  * :class:`TransferResult` — what happened (bytes, simulated wall time,
+    per-replica contribution, retries/hedges/stripes),
+  * :class:`TransferPlan` — the broker's Access Phase prescription:
+    primary + ranked backups + predicted bandwidths + the per-chunk
+    stripe map a striped executor follows.
+
+It lives in ``core`` (below both ``core.broker`` and ``storage``) so
+neither layer needs a deferred import of the other.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from .catalog import PhysicalFile
+
+__all__ = [
+    "TransferFailure",
+    "TransferRequest",
+    "ChunkEvent",
+    "TransferResult",
+    "TransferPlan",
+]
+
+
+class TransferFailure(IOError):
+    """Endpoint dead / refused / mid-transfer fault."""
+
+
+@dataclass(frozen=True)
+class TransferRequest:
+    """One replica read: the unit the base transfer service executes.
+
+    ``offset``/``length`` select a byte range (striped executors read
+    ranges; ``length=None`` means to end-of-file). ``n_streams`` is the
+    GridFTP stream parallelism for this transfer; ``None`` defers to the
+    service's configured default.
+    """
+
+    replica: PhysicalFile
+    client_url: str
+    offset: int = 0
+    length: Optional[int] = None
+    n_streams: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ChunkEvent:
+    """One completed chunk of an in-flight transfer (restart marker)."""
+
+    payload: bytes
+    nbytes: int
+    seconds: float
+    offset: int  # absolute byte offset within the logical file
+    endpoint: str
+
+    @property
+    def bandwidth(self) -> float:
+        return self.nbytes / self.seconds if self.seconds > 0 else 0.0
+
+
+@dataclass
+class TransferResult:
+    """What a transfer actually did, in simulated time."""
+
+    payload: Any
+    nbytes: int
+    seconds: float
+    # endpoint url → bytes it contributed (one entry for single-source)
+    per_replica: Dict[str, int] = field(default_factory=dict)
+    retries: int = 0  # transient failures retried with backoff
+    hedges: int = 0  # backup stripes launched against slow sources
+    hedge_wins: int = 0  # chunks the hedge stripe claimed first
+    stripes: int = 1  # concurrent stripe count at launch
+    failovers: int = 0  # replicas abandoned for dead/exhausted endpoints
+    lfn: Optional[str] = None
+
+    @property
+    def bandwidth(self) -> float:
+        return self.nbytes / self.seconds if self.seconds > 0 else 0.0
+
+
+@dataclass
+class TransferPlan:
+    """The broker's prescription for the Access Phase.
+
+    ``replicas`` is rank order — ``replicas[0]`` is the primary, the rest
+    are backups. ``predicted[i]`` is the broker's bandwidth prediction
+    for ``replicas[i]`` (None when the endpoint is cold and no history
+    exists); hedging compares observed chunk bandwidth against it.
+    ``stripe_k`` bounds how many replicas a striped executor fans out
+    over; :meth:`stripe_map` assigns chunks to stripes proportionally to
+    predicted bandwidth.
+    """
+
+    lfn: str
+    replicas: List[PhysicalFile]
+    ranks: List[float]
+    predicted: List[Optional[float]]
+    stripe_k: int = 3
+    request_id: Optional[str] = None
+
+    @property
+    def primary(self) -> PhysicalFile:
+        return self.replicas[0]
+
+    @property
+    def backups(self) -> List[PhysicalFile]:
+        return self.replicas[1:]
+
+    def predicted_for(self, endpoint: str) -> Optional[float]:
+        for pfn, p in zip(self.replicas, self.predicted):
+            if pfn.endpoint == endpoint:
+                return p
+        return None
+
+    def stripe_map(self, n_chunks: int, k: Optional[int] = None) -> List[int]:
+        """chunk index → stripe index (into ``replicas[:k]``), weighted by
+        predicted bandwidth so a 2x-faster source owns 2x the chunks.
+        Deterministic: largest-remainder apportionment, then contiguous
+        runs (each stripe reads a consecutive byte range per run)."""
+        k = min(k if k is not None else self.stripe_k, len(self.replicas))
+        k = max(k, 1)
+        if n_chunks <= 0:
+            return []
+        weights = []
+        for i in range(k):
+            p = self.predicted[i]
+            weights.append(float(p) if p and p > 0 else 0.0)
+        if not any(w > 0 for w in weights):
+            weights = [1.0] * k
+        else:  # cold stripes still get a floor share so they warm up
+            floor = min(w for w in weights if w > 0)
+            weights = [w if w > 0 else floor for w in weights]
+        total = sum(weights)
+        shares = [w / total * n_chunks for w in weights]
+        counts = [int(s) for s in shares]
+        rem = n_chunks - sum(counts)
+        order = sorted(range(k), key=lambda i: (-(shares[i] - counts[i]), i))
+        for i in order[:rem]:
+            counts[i] += 1
+        out: List[int] = []
+        for i, c in enumerate(counts):
+            out.extend([i] * c)
+        return out

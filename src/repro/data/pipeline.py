@@ -54,6 +54,7 @@ class DataPipeline:
         broker: Optional[DataBroker] = None,
         cache_shards: int = 4,
         min_bandwidth: float = 0.0,
+        resilient: bool = True,
     ):
         self.host_url = host_url
         self.host_index = host_index
@@ -62,11 +63,22 @@ class DataPipeline:
         self.manifest = manifest
         self.spec = spec
         self.broker = broker or grid.broker_for(host_url)
-        self.transfer = grid.transfer_service(metrics=self.broker.metrics)
+        # shard fetches go through the resilient access layer by default:
+        # striped over the top-ranked replicas, hedged when a source runs
+        # below prediction, breaker-gated after repeated failures
+        self.resilient = resilient
+        if resilient:
+            self.transfer = grid.resilient_transfer_service(self.broker)
+        else:
+            self.transfer = grid.transfer_service(metrics=self.broker.metrics)
         self.min_bandwidth = min_bandwidth
         self._cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self._cache_max = cache_shards
-        self.stats = {"fetches": 0, "cache_hits": 0, "bytes": 0, "fetch_seconds": 0.0}
+        self.stats = {
+            "fetches": 0, "cache_hits": 0, "bytes": 0, "fetch_seconds": 0.0,
+            "stripes": 0, "hedges": 0, "hedge_wins": 0, "retries": 0,
+            "failovers": 0,
+        }
 
     # -- shard access -----------------------------------------------------
     def _tokens_for_shard(self, shard: int) -> np.ndarray:
@@ -75,7 +87,12 @@ class DataPipeline:
             self.stats["cache_hits"] += 1
             return self._cache[shard]
         req = default_read_request(self.host_url, min_bandwidth=self.min_bandwidth)
-        out = self.broker.fetch(self.manifest.lfn(shard), self.transfer, req)
+        if self.resilient:
+            out = self.transfer.fetch(self.manifest.lfn(shard), req)
+            for key in ("stripes", "hedges", "hedge_wins", "retries", "failovers"):
+                self.stats[key] += getattr(out, key)
+        else:
+            out = self.broker.fetch(self.manifest.lfn(shard), self.transfer, req)
         tokens = SyntheticCorpus.decode_bytes(out.payload)
         self.stats["fetches"] += 1
         self.stats["bytes"] += out.nbytes

@@ -115,6 +115,23 @@ class ServeEngine:
             "coalescing_ratio": scheduler.coalescing_ratio(),
             "batch_selects": manager.broker.stats["batch_selects"],
         }
+        # when the manager pulls chunks through the resilient access layer,
+        # surface how the weights actually arrived (striped? hedged? any
+        # endpoint breaker-tripped mid-restore?)
+        xfer = manager.transfer
+        if hasattr(xfer, "breakers"):
+            engine.selection_stats.update(
+                stripes=int(xfer._c_stripes.value),
+                hedges=int(xfer._c_hedges.value),
+                hedge_wins=int(xfer._c_hedge_wins.value),
+                retries=int(xfer._c_retries.value),
+                stripe_failovers=int(xfer._c_stripe_failovers.value),
+                breaker_open=sorted(
+                    ep
+                    for ep, br in xfer.breakers.breakers.items()
+                    if br.state != "closed"
+                ),
+            )
         return engine
 
     def generate(

@@ -1,0 +1,155 @@
+"""Per-endpoint circuit breakers for the resilient access layer.
+
+A breaker protects the client from hammering an endpoint that keeps
+failing: ``closed`` (normal) → ``open`` after N consecutive failures
+(endpoint is skipped entirely) → ``half-open`` after a reset timeout
+(one probe transfer is admitted) → ``closed`` on probe success, back to
+``open`` on probe failure.
+
+Breakers are client-side state (each client judges endpoints from its own
+vantage, like the paper's per-source bandwidth history), but their state
+is *published back* into the endpoint's GRIS as a per-source health
+attribute (``breakerOpenToSource``) so this client's subsequent
+matchmaking — which reads exactly that GRIS view — avoids tripped
+endpoints without any new code path in the Match Phase.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+__all__ = ["BreakerOpen", "CircuitBreaker", "BreakerBoard"]
+
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half-open"
+
+#: numeric encoding published to GRIS (and the obs gauge): requirements
+#: gate on ``breakerOpenToSource < 1`` so half-open endpoints stay
+#: selectable as probes while open ones are excluded.
+STATE_VALUE = {CLOSED: 0.0, HALF_OPEN: 0.5, OPEN: 1.0}
+
+
+class BreakerOpen(RuntimeError):
+    """An operation was refused because the endpoint's breaker is open."""
+
+
+@dataclass
+class CircuitBreaker:
+    """One endpoint's failure-trip state machine (deterministic clock)."""
+
+    endpoint: str
+    failure_threshold: int = 3
+    reset_s: float = 30.0
+    state: str = CLOSED
+    consecutive_failures: int = 0
+    opened_at: float = 0.0
+    trips: int = 0  # closed/half-open → open transitions
+
+    def _maybe_half_open(self, now: float) -> None:
+        if self.state == OPEN and now - self.opened_at >= self.reset_s:
+            self.state = HALF_OPEN
+
+    def allows(self, now: float) -> bool:
+        """May a transfer use this endpoint right now? (half-open admits
+        the probe)"""
+        self._maybe_half_open(now)
+        return self.state != OPEN
+
+    def record_success(self, now: float) -> str:
+        self._maybe_half_open(now)
+        self.consecutive_failures = 0
+        self.state = CLOSED
+        return self.state
+
+    def record_failure(self, now: float) -> str:
+        self._maybe_half_open(now)
+        self.consecutive_failures += 1
+        if self.state == HALF_OPEN or (
+            self.consecutive_failures >= self.failure_threshold
+        ):
+            if self.state != OPEN:
+                self.trips += 1
+            self.state = OPEN
+            self.opened_at = now
+        return self.state
+
+    @property
+    def value(self) -> float:
+        return STATE_VALUE[self.state]
+
+
+class BreakerBoard:
+    """All of one client's breakers + the GRIS/obs feedback on changes.
+
+    ``publish`` is called as ``publish(endpoint_url, value)`` whenever an
+    endpoint's breaker state value changes (0 closed / 0.5 half-open /
+    1 open) — the resilient service wires it to
+    ``gris.publish_source_health`` so matchmaking sees it.
+    """
+
+    def __init__(
+        self,
+        *,
+        failure_threshold: int = 3,
+        reset_s: float = 30.0,
+        publish: Optional[Callable[[str, float], None]] = None,
+        metrics=None,
+    ):
+        self.failure_threshold = failure_threshold
+        self.reset_s = reset_s
+        self.publish = publish
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        self._gauges = {}
+        self.metrics = metrics
+
+    def get(self, endpoint: str) -> CircuitBreaker:
+        br = self.breakers.get(endpoint)
+        if br is None:
+            br = CircuitBreaker(endpoint, self.failure_threshold, self.reset_s)
+            self.breakers[endpoint] = br
+        return br
+
+    def _sync(self, br: CircuitBreaker, before: float) -> None:
+        if br.value == before:
+            return
+        if self.publish is not None:
+            self.publish(br.endpoint, br.value)
+        if self.metrics is not None:
+            g = self._gauges.get(br.endpoint)
+            if g is None:
+                g = self.metrics.gauge(
+                    "resilient_breaker_state",
+                    "circuit state per endpoint (0 closed, 0.5 half-open, 1 open)",
+                    endpoint=br.endpoint,
+                )
+                self._gauges[br.endpoint] = g
+            g.set(br.value)
+
+    def allows(self, endpoint: str, now: float) -> bool:
+        br = self.get(endpoint)
+        before = br.value
+        ok = br.allows(now)
+        self._sync(br, before)
+        return ok
+
+    def record_success(self, endpoint: str, now: float) -> None:
+        br = self.get(endpoint)
+        before = br.value
+        br.record_success(now)
+        self._sync(br, before)
+
+    def record_failure(self, endpoint: str, now: float) -> None:
+        br = self.get(endpoint)
+        before = br.value
+        br.record_failure(now)
+        self._sync(br, before)
+
+    def state(self, endpoint: str) -> str:
+        return self.get(endpoint).state
+
+    def open_endpoints(self, now: float) -> list:
+        return sorted(
+            url for url, br in self.breakers.items() if not br.allows(now)
+        )

@@ -62,6 +62,10 @@ class StorageEndpoint:
         self.flaky_rate = 0.0  # probability a transfer fails outright
         self._flaky_counter = 0
         self.active_transfers = 0
+        # total parallel streams currently open to this endpoint, across
+        # every in-flight transfer/stripe: path utilization is a function
+        # of this total (per-endpoint accounting, not per-service)
+        self.active_streams = 0
 
         static = {
             "hostname": url,
@@ -172,10 +176,20 @@ class DataGrid:
             client_url, self.catalog, self.gris_for, clock=self.clock, **kwargs
         )
 
-    def transfer_service(self, *, metrics=None):
+    def transfer_service(self, *, metrics=None, config=None):
         from .transfer import SimulatedTransferService
 
-        return SimulatedTransferService(self, metrics=metrics)
+        return SimulatedTransferService(self, config, metrics=metrics)
+
+    def resilient_transfer_service(self, broker, *, config=None, resilience=None):
+        """A :class:`~repro.storage.resilient.ResilientTransferService`
+        bound to one client's broker: striped/hedged plan execution with
+        retry, restart markers, and breaker → GRIS feedback."""
+        from .resilient import ResilientTransferService
+
+        return ResilientTransferService(
+            self, broker, config=config, resilience=resilience
+        )
 
     # -- replication helpers ------------------------------------------------
     def store_replica(self, lfn: str, endpoint_url: str, data: bytes, path: Optional[str] = None) -> PhysicalFile:

@@ -1,0 +1,551 @@
+"""Resilient multi-replica access: striped + hedged TransferPlan execution.
+
+The paper's Access Phase picks one winner and hopes; production grids
+(GridFTP striping, the EU DataGrid failure reports) learned to spread one
+file over several replicas and to assume any of them can die or crawl
+mid-transfer. :class:`ResilientTransferService` executes the broker's
+:class:`~repro.core.transferplan.TransferPlan` that way, against the
+simulated clock:
+
+  * **striping** — chunk ranges fan out over the top-k ranked replicas in
+    parallel simulated time (the wall time charged is the stripe
+    *makespan*, not the sum), apportioned by predicted bandwidth,
+  * **hedging** — a stripe whose observed chunk bandwidth falls below
+    ``hedge_factor ×`` the broker's prediction (or, for a cold source
+    with no history, the fastest peer stripe's observed rate) for
+    ``hedge_patience`` consecutive chunks gets its remaining chunks
+    *duplicated* onto the best unused backup; the two race, first claim
+    wins per chunk,
+  * **retry/backoff** — transient faults (flaky endpoints) retry in
+    place with jittered exponential backoff, resuming from the last
+    completed chunk (restart markers: completed chunks are never
+    re-fetched),
+  * **failover** — a dead or retry-exhausted stripe hands its pending
+    chunks to a fresh backup replica, or to the surviving stripes,
+  * **work stealing** — a stripe that drains its queue takes a
+    bandwidth-weighted share of the largest pending queue, so a slow
+    backup that inherited a dead stripe's chunks cannot drag the
+    makespan while fast stripes sit idle,
+  * **circuit breakers** — per-endpoint closed → open → half-open state
+    (:mod:`.breaker`) gates which replicas a plan may touch, and every
+    state change is published back into the endpoint's GRIS as the
+    per-source ``breakerOpenToSource`` attribute, which the broker's
+    default read request *requires* to be ``< 1`` — matchmaking itself
+    learns to avoid tripped endpoints.
+
+Everything is deterministic: stripe scheduling is a min-heap walk over
+per-stripe virtual clocks, jitter comes from seeded hashes, and the
+shared grid clock only ever moves to the current stripe frontier (so a
+scheduled fault injector hooked on :attr:`on_advance` can kill an
+endpoint *mid-transfer* and the executor observes it exactly then).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.catalog import PhysicalFile
+from repro.core.transferplan import (
+    TransferFailure,
+    TransferPlan,
+    TransferRequest,
+    TransferResult,
+)
+
+from .breaker import BreakerBoard
+from .transfer import SimulatedTransferService, TransferConfig, _stable_unit
+
+__all__ = ["ResilienceConfig", "ResilientTransferService"]
+
+
+@dataclass
+class ResilienceConfig:
+    stripe_k: int = 3  # max replicas striped across
+    hedge_factor: float = 0.4  # hedge when observed < factor × predicted
+    hedge_patience: int = 2  # consecutive slow chunks before hedging
+    max_hedges: int = 2  # hedge launches per plan execution
+    max_retries: int = 2  # transient retries per stripe before failover
+    backoff_base_s: float = 0.25  # first retry delay
+    backoff_max_s: float = 4.0  # delay cap
+    backoff_jitter: float = 0.5  # ± fraction of the delay, seeded hash
+    breaker_failures: int = 3  # consecutive failures to trip open
+    breaker_reset_s: float = 60.0  # open → half-open probe window
+
+
+class _Stripe:
+    """One in-flight stripe: a replica, its pending chunks, and a virtual
+    clock that only the executor advances."""
+
+    __slots__ = (
+        "idx", "pfn", "ep", "data", "queue", "t", "streams", "slow",
+        "retries", "hedge_of", "hedged", "alive", "bytes_done", "started_at",
+        "last_bw",
+    )
+
+    def __init__(self, idx, pfn, ep, data, queue, t, streams):
+        self.idx = idx
+        self.pfn = pfn
+        self.ep = ep
+        self.data = data
+        self.queue = queue  # deque of chunk indices
+        self.t = t  # virtual time cursor
+        self.streams = streams
+        self.slow = 0  # consecutive below-prediction chunks
+        self.last_bw = 0.0  # most recent observed chunk bandwidth
+        self.retries = 0  # consecutive transient retries
+        self.hedge_of: Optional[int] = None  # stripe idx this hedges
+        self.hedged = False  # already spawned a hedge
+        self.alive = True
+        self.bytes_done = 0
+        self.started_at = t
+
+
+class ResilientTransferService(SimulatedTransferService):
+    """Striped/hedged/retrying executor over the base simulated engine.
+
+    Inherits the single-source ``transfer``/``transfer_chunks`` surface
+    (so it satisfies the broker's TransferService protocol anywhere),
+    and adds :meth:`execute` (run a TransferPlan) and :meth:`fetch`
+    (select → execute, annotating the broker's decision record).
+    """
+
+    def __init__(
+        self,
+        grid,
+        broker,
+        *,
+        config: Optional[TransferConfig] = None,
+        resilience: Optional[ResilienceConfig] = None,
+    ):
+        super().__init__(grid, config, metrics=broker.metrics)
+        self.broker = broker
+        self.resilience = resilience or ResilienceConfig()
+        self.breakers = BreakerBoard(
+            failure_threshold=self.resilience.breaker_failures,
+            reset_s=self.resilience.breaker_reset_s,
+            publish=self._publish_breaker,
+            metrics=broker.metrics,
+        )
+        #: optional hook called whenever the executor advances the shared
+        #: clock to a stripe frontier — wire a FaultInjector's ``tick``
+        #: here to make scheduled faults land mid-transfer.
+        self.on_advance: Optional[Callable[[], Any]] = None
+        m = broker.metrics
+        self._c_stripes = m.counter(
+            "resilient_stripes_total", "stripes launched across plan executions"
+        )
+        self._c_hedges = m.counter(
+            "resilient_hedges_total", "hedge stripes launched against slow sources"
+        )
+        self._c_hedge_wins = m.counter(
+            "resilient_hedge_wins_total", "chunks claimed by a hedge stripe first"
+        )
+        self._c_retries = m.counter(
+            "resilient_retries_total", "transient chunk failures retried with backoff"
+        )
+        self._c_stripe_failovers = m.counter(
+            "resilient_stripe_failovers_total",
+            "stripes abandoned (dead/exhausted) with chunks reassigned",
+        )
+        self._c_breaker_skips = m.counter(
+            "resilient_breaker_skips_total", "replicas excluded by an open breaker"
+        )
+        self._c_steals = m.counter(
+            "resilient_steals_total",
+            "chunk batches stolen by idle stripes from laggards",
+        )
+        self._h_retries = m.histogram(
+            "resilient_retries_per_transfer",
+            "retry count distribution per plan execution",
+            buckets=(0, 1, 2, 3, 5, 8, 13, float("inf")),
+        )
+        self._h_backoff = m.histogram(
+            "resilient_backoff_seconds",
+            "jittered backoff delays charged to stripes",
+            buckets=(0.1, 0.25, 0.5, 1, 2, 4, 8, float("inf")),
+        )
+        self._h_stripe_k = m.histogram(
+            "resilient_stripes_per_transfer",
+            "concurrent stripes at plan launch",
+            buckets=(1, 2, 3, 4, 6, 8, float("inf")),
+        )
+
+    # ------------------------------------------------------------- feedback
+    def _publish_breaker(self, endpoint: str, value: float) -> None:
+        """Breaker state → the endpoint's GRIS per-source health attrs —
+        the feedback loop the Match Phase reads (``breakerOpenToSource``)."""
+        gris = self.grid.gris_for(endpoint)
+        if gris is not None:
+            gris.publish_source_health(
+                self.broker.client_url, {"breakerOpenToSource": value}
+            )
+        # batched selection works from a TTL snapshot; a breaker flip is
+        # exactly the "published world changed" event that invalidates it
+        self.broker.invalidate_snapshot()
+
+    def _republish_breakers(self) -> None:
+        """Re-push non-closed breaker state for endpoints whose GRIS was
+        unreachable at trip time (e.g. tripped by death, then healed)."""
+        now = self.grid.clock.now()
+        for url, br in self.breakers.breakers.items():
+            br.allows(now)  # open → half-open transitions happen lazily
+            if br.value > 0:
+                gris = self.grid.gris_for(url)
+                if gris is not None:
+                    gris.publish_source_health(
+                        self.broker.client_url, {"breakerOpenToSource": br.value}
+                    )
+
+    # ------------------------------------------------------------ top level
+    def fetch(
+        self,
+        lfn: str,
+        request=None,
+        *,
+        top_k: Optional[int] = None,
+    ) -> TransferResult:
+        """Select → plan → striped execution, end to end.
+
+        The selection's decision record is annotated with the access
+        outcome (fetched_from = the endpoint that contributed the most
+        bytes) and the client-side history monitor observes the achieved
+        end-to-end bandwidth, exactly like ``DataBroker.access``.
+        """
+        self._republish_breakers()
+        sel = self.broker.select(lfn, request, top_k=top_k)
+        res = self.execute(sel.plan)
+        self.broker.note_access(sel.request_id, res)
+        return res
+
+    # ------------------------------------------------------------- executor
+    def execute(self, plan: TransferPlan) -> TransferResult:
+        """Run a TransferPlan: striped, hedged, retried, breaker-gated."""
+        cfg = self.resilience
+        clock = self.grid.clock
+        t0 = clock.now()
+        size = plan.primary.size
+        cb = self.config.chunk_bytes
+        n_chunks = max(1, math.ceil(size / cb)) if size > 0 else 1
+
+        # breaker gate (half-open admits the probe); if everything is
+        # tripped, probe the full ranked list rather than fail outright
+        candidates = [
+            pfn for pfn in plan.replicas if self.breakers.allows(pfn.endpoint, t0)
+        ]
+        skipped = len(plan.replicas) - len(candidates)
+        if skipped:
+            self._c_breaker_skips.inc(skipped)
+        if not candidates:
+            candidates = list(plan.replicas)
+
+        k = max(1, min(plan.stripe_k, cfg.stripe_k, len(candidates)))
+        smap = plan.stripe_map(n_chunks, k)
+        queues: List[deque] = [deque() for _ in range(k)]
+        for ci, s in enumerate(smap):
+            queues[s].append(ci)
+
+        done: List[Optional[bytes]] = [None] * n_chunks
+        claimed: Set[int] = set()
+        per_replica: Dict[str, int] = {}
+        ep_elapsed: Dict[str, Tuple[float, float]] = {}  # url -> (start, end)
+        stats = {
+            "retries": 0, "hedges": 0, "hedge_wins": 0, "failovers": 0,
+            "steals": 0,
+        }
+        stripes: List[_Stripe] = []
+        used_eps: Set[str] = set()
+        max_finish = t0
+
+        def _chunk_range(ci: int) -> Tuple[int, int]:
+            lo = ci * cb
+            return lo, min(lo + cb, size)
+
+        def _activate(
+            pfn: PhysicalFile, queue: deque, at: float, hedge_of: Optional[int]
+        ) -> Optional[_Stripe]:
+            """Open a stripe on ``pfn``; None if the endpoint refuses."""
+            ep = self.grid.endpoints.get(pfn.endpoint)
+            if ep is None or not ep.alive:
+                self.breakers.record_failure(pfn.endpoint, at)
+                return None
+            try:
+                data = ep.get(pfn.path)
+            except FileNotFoundError:
+                self.breakers.record_failure(pfn.endpoint, at)
+                return None
+            st = _Stripe(
+                len(stripes), pfn, ep, data,
+                deque(queue), at + self.config.latency_s, self.config.n_streams,
+            )
+            st.hedge_of = hedge_of
+            ep.active_transfers += 1
+            ep.active_streams += st.streams
+            stripes.append(st)
+            used_eps.add(pfn.endpoint)
+            self._c_stripes.inc()
+            return st
+
+        def _deactivate(st: _Stripe) -> None:
+            if not st.alive:
+                return
+            st.alive = False
+            st.ep.active_transfers -= 1
+            st.ep.active_streams -= st.streams
+            nonlocal max_finish
+            max_finish = max(max_finish, st.t)
+            s0, s1 = ep_elapsed.get(st.ep.url, (st.started_at, st.t))
+            ep_elapsed[st.ep.url] = (min(s0, st.started_at), max(s1, st.t))
+
+        def _backup_ok(pfn: PhysicalFile, at: float) -> bool:
+            if not self.breakers.allows(pfn.endpoint, at):
+                return False
+            ep = self.grid.endpoints.get(pfn.endpoint)
+            return ep is not None and ep.alive
+
+        def _next_backup(
+            at: float, avoid: Sequence[str] = ()
+        ) -> Optional[PhysicalFile]:
+            # prefer a replica no stripe has touched yet, by rank...
+            for pfn in plan.replicas:
+                if pfn.endpoint in used_eps or pfn.endpoint in avoid:
+                    continue
+                if _backup_ok(pfn, at):
+                    return pfn
+            # ...else re-open a stripe on an endpoint whose stripe already
+            # finished (per-endpoint stream accounting shares the pipe, so
+            # a second stripe there is safe, just slower than a fresh one)
+            active_eps = {s.ep.url for s in stripes if s.alive}
+            for pfn in plan.replicas:
+                if pfn.endpoint in avoid or pfn.endpoint in active_eps:
+                    continue
+                if _backup_ok(pfn, at):
+                    return pfn
+            return None
+
+        def _steal_into(st: _Stripe) -> bool:
+            """Work stealing: a stripe that drained its queue takes a
+            bandwidth-weighted share of the largest pending queue's tail,
+            so one slow replica cannot drag the makespan while faster
+            stripes sit finished (failover often dumps a dead stripe's
+            chunks on whatever backup existed, however slow)."""
+            if not st.ep.alive:
+                return False
+            victims = [
+                s
+                for s in stripes
+                if s.alive
+                and s is not st
+                and s.ep.url != st.ep.url
+                and len(s.queue) > 1
+            ]
+            if not victims:
+                return False
+            victim = max(victims, key=lambda s: (len(s.queue), -s.idx))
+            bw_t = st.last_bw or plan.predicted_for(st.ep.url) or 0.0
+            bw_v = victim.last_bw or plan.predicted_for(victim.ep.url) or 0.0
+            share = bw_t / (bw_t + bw_v) if bw_t > 0 and bw_v > 0 else 0.5
+            take = min(len(victim.queue) - 1, int(len(victim.queue) * share))
+            if take <= 0:
+                return False
+            stolen = [victim.queue.pop() for _ in range(take)]
+            st.queue.extend(reversed(stolen))
+            stats["steals"] += 1
+            self._c_steals.inc()
+            return True
+
+        def _fail_stripe(st: _Stripe, reason: str) -> None:
+            """Breaker bookkeeping + reassign pending chunks (restart
+            markers: only chunks not yet claimed move)."""
+            at = st.t
+            _deactivate(st)
+            self.breakers.record_failure(st.ep.url, at)
+            stats["failovers"] += 1
+            self._c_stripe_failovers.inc()
+            pending = [ci for ci in st.queue if ci not in claimed]
+            if not pending:
+                return
+            backup = _next_backup(at, avoid=(st.ep.url,))
+            if backup is not None:
+                _activate(backup, deque(pending), at, st.hedge_of)
+                return
+            survivors = [
+                s for s in stripes if s.alive and s is not st
+            ]
+            if survivors:
+                for i, ci in enumerate(pending):
+                    survivors[i % len(survivors)].queue.append(ci)
+
+        # launch the initial stripe set (failed launches reassign through
+        # the same failover path a mid-flight death takes)
+        launched = 0
+        for s in range(k):
+            if not queues[s]:
+                continue
+            st = _activate(candidates[s], queues[s], t0, None)
+            if st is None:
+                stats["failovers"] += 1
+                self._c_stripe_failovers.inc()
+                backup = _next_backup(t0, avoid=(candidates[s].endpoint,))
+                st = _activate(backup, queues[s], t0, None) if backup else None
+                if st is None:
+                    # chunks stay unassigned; the post-launch sweep below
+                    # hands them to whichever stripe did come up
+                    live = [x for x in stripes if x.alive]
+                    for i, ci in enumerate(queues[s]):
+                        if live:
+                            live[i % len(live)].queue.append(ci)
+            if st is not None:
+                launched += 1
+        if not any(st.alive for st in stripes):
+            raise self._fault(
+                f"{plan.lfn or plan.primary.path}: no replica admitted a stripe "
+                f"({len(plan.replicas)} ranked, {skipped} breaker-open)"
+            )
+        # chunks whose stripe never launched and found no survivors at the
+        # time: hand them to the first live stripe now
+        assigned = set()
+        for st in stripes:
+            assigned.update(st.queue)
+        live0 = next(st for st in stripes if st.alive)
+        for ci in range(n_chunks):
+            if ci not in assigned:
+                live0.queue.append(ci)
+        self._h_stripe_k.observe(launched)
+
+        # ---- min-frontier event loop over virtual stripe clocks ----
+        while len(claimed) < n_chunks:
+            active = [st for st in stripes if st.alive]
+            # a drained stripe (queue fully claimed / finished) first tries
+            # to steal pending work from a laggard, else retires
+            for st in active:
+                while st.queue and st.queue[0] in claimed:
+                    st.queue.popleft()
+                if not st.queue and not _steal_into(st):
+                    _deactivate(st)
+            active = [st for st in stripes if st.alive]
+            if not active:
+                raise self._fault(
+                    f"{plan.lfn or plan.primary.path}: every stripe failed "
+                    f"with {n_chunks - len(claimed)} chunk(s) pending"
+                )
+            st = min(active, key=lambda s: (s.t, s.idx))
+            # advance the shared clock to the frontier; scheduled faults
+            # (injector.tick on on_advance) land exactly here — this is
+            # what makes "endpoint killed mid-transfer" observable
+            if st.t > clock.now():
+                clock.advance(st.t - clock.now())
+                if self.on_advance is not None:
+                    self.on_advance()
+            if not st.ep.alive:
+                _fail_stripe(st, "died mid-transfer")
+                continue
+            ci = st.queue[0]
+            # transient fault? retry in place with jittered backoff
+            try:
+                self._maybe_flake(st.ep)
+            except TransferFailure:
+                st.retries += 1
+                stats["retries"] += 1
+                self._c_retries.inc()
+                if st.retries > cfg.max_retries:
+                    _fail_stripe(st, "retries exhausted")
+                    continue
+                delay = min(
+                    cfg.backoff_base_s * (2 ** (st.retries - 1)), cfg.backoff_max_s
+                )
+                jit = cfg.backoff_jitter * (
+                    2 * _stable_unit(st.ep.url, plan.lfn or "", str(ci), str(st.retries))
+                    - 1
+                )
+                delay = max(delay * (1 + jit), 1e-3)
+                self._h_backoff.observe(delay)
+                st.t += delay
+                continue
+            st.retries = 0
+            lo, hi = _chunk_range(ci)
+            nb = hi - lo
+            csecs = self.chunk_seconds(st.ep, self.broker.client_url, nb, st.t, st.streams)
+            if not math.isfinite(csecs):
+                _fail_stripe(st, "zero bandwidth")
+                continue
+            st.t += csecs
+            st.queue.popleft()
+            claimed.add(ci)
+            done[ci] = st.data[lo:hi]
+            st.bytes_done += nb
+            per_replica[st.ep.url] = per_replica.get(st.ep.url, 0) + nb
+            self.breakers.record_success(st.ep.url, st.t)
+            if st.hedge_of is not None:
+                stats["hedge_wins"] += 1
+                self._c_hedge_wins.inc()
+            # hedging: observed chunk bandwidth vs the broker's prediction;
+            # a stripe the broker had no history for (cold source) is
+            # judged against the fastest peer stripe instead
+            if nb > 0 and csecs > 0:
+                obw = nb / csecs
+                pred = plan.predicted_for(st.pfn.endpoint)
+                if not pred:
+                    # finished peers still count as reference points
+                    peers = [
+                        s.last_bw for s in stripes if s is not st and s.last_bw > 0
+                    ]
+                    pred = max(peers) if peers else None
+                st.last_bw = obw
+                if pred and obw < cfg.hedge_factor * pred:
+                    st.slow += 1
+                else:
+                    st.slow = 0
+                if (
+                    st.slow >= cfg.hedge_patience
+                    and not st.hedged
+                    and stats["hedges"] < cfg.max_hedges
+                ):
+                    backup = _next_backup(st.t, avoid=(st.ep.url,))
+                    remaining = [c for c in st.queue if c not in claimed]
+                    if backup is not None and remaining:
+                        hedge = _activate(backup, deque(remaining), st.t, st.idx)
+                        if hedge is not None:
+                            st.hedged = True
+                            stats["hedges"] += 1
+                            self._c_hedges.inc()
+
+        for st in stripes:
+            _deactivate(st)
+        if max_finish > clock.now():
+            clock.advance(max_finish - clock.now())
+            if self.on_advance is not None:
+                self.on_advance()
+        seconds = clock.now() - t0
+
+        # deliver what the servers actually held — a replica whose stored
+        # bytes are shorter than the catalog size (corruption) yields a
+        # short payload, and the caller's checksum catches it, exactly as
+        # with a single-source read
+        payload = b"".join(p for p in done if p is not None)
+        nbytes = len(payload)
+        # server-side instrumentation per contributing endpoint (§3.2)
+        for url, contributed in per_replica.items():
+            ep = self.grid.endpoints.get(url)
+            if ep is None:
+                continue
+            s0, s1 = ep_elapsed.get(url, (t0, clock.now()))
+            ep.monitor.observe_transfer(
+                "read", self.broker.client_url, contributed, max(s1 - s0, 1e-9), s0
+            )
+        self._record("read", nbytes, seconds)
+        self._h_retries.observe(stats["retries"])
+        return TransferResult(
+            payload=payload,
+            nbytes=nbytes,
+            seconds=seconds,
+            per_replica=per_replica,
+            retries=stats["retries"],
+            hedges=stats["hedges"],
+            hedge_wins=stats["hedge_wins"],
+            stripes=launched,
+            failovers=stats["failovers"],
+            lfn=plan.lfn,
+        )

@@ -11,24 +11,42 @@ rank expressions read. Transfers are chunked so the broker can watch
 in-flight bandwidth for straggler mitigation, and parallel streams model
 GridFTP's stream parallelism (diminishing returns past the path's
 capacity).
+
+The API speaks :class:`~repro.core.transferplan.TransferRequest` →
+:class:`~repro.core.transferplan.TransferResult`; the old positional
+``read(replica, client_url)`` tuple surface survives only as deprecation
+shims. Stream utilization is accounted **per endpoint**: every open
+stripe registers its streams on the endpoint, and each stripe's share of
+the path is ``U(total_streams) * mine / total`` — so k stripes hammering
+one endpoint saturate the same pipe once instead of k times, and a
+single-replica k-stripe plan charges time consistent with a k-replica
+striped plan (the utilization curve is one function of per-endpoint
+stream count, wherever the streams come from).
 """
 
 from __future__ import annotations
 
 import hashlib
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Any, Iterator, List, Optional, Tuple
 
 from repro.core.catalog import PhysicalFile
+from repro.core.transferplan import (
+    ChunkEvent,
+    TransferFailure,
+    TransferRequest,
+    TransferResult,
+)
 
 from .endpoint import DataGrid, StorageEndpoint
 
-__all__ = ["TransferFailure", "SimulatedTransferService"]
-
-
-class TransferFailure(IOError):
-    """Endpoint dead / refused / mid-transfer fault."""
+__all__ = [
+    "TransferFailure",
+    "TransferConfig",
+    "SimulatedTransferService",
+]
 
 
 def _stable_unit(*keys: str) -> float:
@@ -40,8 +58,20 @@ def _stable_unit(*keys: str) -> float:
 class TransferConfig:
     chunk_bytes: int = 256 << 10  # straggler-monitoring granularity
     latency_s: float = 0.030  # per-transfer setup (TCP+auth handshake)
-    n_streams: int = 4  # GridFTP parallel streams
+    n_streams: int = 4  # GridFTP parallel streams per stripe
     stream_efficiency: float = 0.85  # per-extra-stream scaling
+
+
+def _single_stream_utilization() -> float:
+    return 0.4  # one stream fills ~40% of a long fat pipe
+
+
+def stream_utilization(n_streams: int) -> float:
+    """Path utilization with n parallel streams: extra streams saturate
+    harmonically (GridFTP's motivation for stream parallelism)."""
+    n = max(int(n_streams), 1)
+    su = _single_stream_utilization()
+    return n * su / (1.0 + (n - 1) * su)
 
 
 class SimulatedTransferService:
@@ -114,15 +144,15 @@ class SimulatedTransferService:
             if _stable_unit(ep.url, "flake", str(ep._flaky_counter)) < ep.flaky_rate:
                 raise self._fault(f"endpoint {ep.url} dropped the connection")
 
-    def _stream_utilization(self) -> float:
-        """Path utilization with n parallel streams: a single stream only
-        fills ~40% of a long fat pipe; extra streams saturate harmonically
-        (GridFTP's motivation for stream parallelism)."""
-        n = max(self.config.n_streams, 1)
-        su = 0.4  # single-stream utilization
-        return n * su / (1.0 + (n - 1) * su)
+    def _bandwidth(
+        self, ep: StorageEndpoint, client_url: str, t: float, my_streams: int
+    ) -> float:
+        """This stripe's share of the path at virtual time ``t``.
 
-    def _bandwidth(self, ep: StorageEndpoint, client_url: str, t: float) -> float:
+        Utilization is a function of the endpoint's *total* concurrently
+        open streams (``ep.active_streams``), split proportionally — not
+        of a per-service constant — so concurrent stripes share one pipe.
+        """
         bw = self.grid.net.effective_bandwidth(
             ep.url,
             client_url,
@@ -130,30 +160,46 @@ class SimulatedTransferService:
             load_factor=ep.active_transfers,
             disk_rate=ep.disk_rate,
         )
-        return bw * ep.degradation * self._stream_utilization()
+        total = max(ep.active_streams, my_streams, 1)
+        share = stream_utilization(total) * (my_streams / total)
+        return bw * ep.degradation * share
 
-    # -- reads ----------------------------------------------------------------
-    def read(self, replica: PhysicalFile, client_url: str) -> Tuple[bytes, int, float]:
-        """Whole-file read. Returns (payload, nbytes, seconds)."""
-        chunks: List[bytes] = []
-        nbytes = 0
-        seconds = 0.0
-        for payload, cbytes, csecs in self.read_chunks(replica, client_url):
-            chunks.append(payload)
-            nbytes += cbytes
-            seconds += csecs
-        return b"".join(chunks), nbytes, seconds
+    def chunk_seconds(
+        self,
+        ep: StorageEndpoint,
+        client_url: str,
+        nbytes: int,
+        t: float,
+        my_streams: int,
+    ) -> float:
+        """Simulated seconds to move ``nbytes`` from ``ep`` at virtual
+        time ``t`` while holding ``my_streams`` of the endpoint's open
+        streams (the striped executor's per-chunk cost model)."""
+        bw = self._bandwidth(ep, client_url, t, my_streams)
+        return nbytes / bw if bw > 0 else math.inf
 
-    def read_chunks(
-        self, replica: PhysicalFile, client_url: str
-    ) -> Iterator[Tuple[bytes, int, float]]:
-        """Chunked read; yields (chunk, nbytes, seconds) and charges the
-        clock as it goes. Instrumented server-side on completion."""
-        ep = self._endpoint(replica.endpoint)
+    # -- new surface: TransferRequest → TransferResult -----------------------
+    def _resolve(self, request: TransferRequest) -> Tuple[StorageEndpoint, bytes, int]:
+        """Endpoint + byte range for a request (no clock charged)."""
+        ep = self._endpoint(request.replica.endpoint)
+        data = ep.get(request.replica.path)
+        end = (
+            len(data)
+            if request.length is None
+            else min(request.offset + request.length, len(data))
+        )
+        return ep, data[request.offset : end], request.offset
+
+    def transfer_chunks(self, request: TransferRequest) -> Iterator[ChunkEvent]:
+        """Chunked read of the request's byte range; yields
+        :class:`ChunkEvent`s and charges the shared clock as it goes.
+        Instrumented server-side on completion (§3.2)."""
+        ep, data, base = self._resolve(request)
         self._maybe_flake(ep)
-        data = ep.get(replica.path)
+        n_streams = request.n_streams or self.config.n_streams
         t0 = self.grid.clock.now()
         ep.active_transfers += 1
+        ep.active_streams += n_streams
         total = len(data)
         sent = 0
         elapsed = self.config.latency_s
@@ -161,41 +207,97 @@ class SimulatedTransferService:
         try:
             while sent < total or total == 0:
                 chunk = data[sent : sent + self.config.chunk_bytes]
-                bw = self._bandwidth(ep, client_url, self.grid.clock.now())
-                csecs = len(chunk) / bw if bw > 0 else math.inf
+                csecs = self.chunk_seconds(
+                    ep, request.client_url, len(chunk), self.grid.clock.now(), n_streams
+                )
                 self.grid.clock.advance(csecs)
                 elapsed += csecs
+                yield ChunkEvent(chunk, len(chunk), csecs, base + sent, ep.url)
                 sent += len(chunk)
-                yield chunk, len(chunk), csecs
                 if total == 0:
                     break
                 # endpoint may die mid-transfer (fault injection)
-                if not ep.alive:
+                if sent < total and not ep.alive:
                     raise self._fault(f"endpoint {ep.url} died mid-transfer")
-                self._maybe_flake(ep)
+                if sent < total:
+                    self._maybe_flake(ep)
         finally:
             ep.active_transfers -= 1
+            ep.active_streams -= n_streams
         # server-side instrumentation (§3.2): read = replica -> client
-        ep.monitor.observe_transfer("read", client_url, total, max(elapsed, 1e-9), t0)
+        ep.monitor.observe_transfer(
+            "read", request.client_url, total, max(elapsed, 1e-9), t0
+        )
         self._record("read", total, elapsed)
+
+    def transfer(self, request: TransferRequest) -> TransferResult:
+        """Whole-range single-source read → :class:`TransferResult`."""
+        chunks: List[bytes] = []
+        nbytes = 0
+        seconds = self.config.latency_s
+        for ev in self.transfer_chunks(request):
+            chunks.append(ev.payload)
+            nbytes += ev.nbytes
+            seconds += ev.seconds
+        return TransferResult(
+            payload=b"".join(chunks),
+            nbytes=nbytes,
+            seconds=seconds,
+            per_replica={request.replica.endpoint: nbytes},
+            stripes=1,
+            lfn=None,
+        )
 
     # -- writes ----------------------------------------------------------------
     def write(
         self, endpoint_url: str, path: str, data: bytes, client_url: str
-    ) -> Tuple[int, float]:
-        """Client → endpoint write (checkpoint placement). Returns
-        (nbytes, seconds); registers nothing — callers own the catalog."""
+    ) -> TransferResult:
+        """Client → endpoint write (checkpoint placement). Registers
+        nothing — callers own the catalog."""
         ep = self._endpoint(endpoint_url)
         self._maybe_flake(ep)
+        n_streams = self.config.n_streams
         t0 = self.grid.clock.now()
         ep.active_transfers += 1
+        ep.active_streams += n_streams
         try:
-            bw = self._bandwidth(ep, client_url, t0)
+            bw = self._bandwidth(ep, client_url, t0, n_streams)
             seconds = self.config.latency_s + (len(data) / bw if bw > 0 else math.inf)
             self.grid.clock.advance(seconds)
             ep.put(path, data)
         finally:
             ep.active_transfers -= 1
+            ep.active_streams -= n_streams
         ep.monitor.observe_transfer("write", client_url, len(data), max(seconds, 1e-9), t0)
         self._record("write", len(data), seconds)
-        return len(data), seconds
+        return TransferResult(
+            payload=None,
+            nbytes=len(data),
+            seconds=seconds,
+            per_replica={endpoint_url: len(data)},
+        )
+
+    # -- deprecated tuple surface (shims only; no in-repo callers) -----------
+    def read(self, replica: PhysicalFile, client_url: str) -> Tuple[bytes, int, float]:
+        """Deprecated: use ``transfer(TransferRequest(replica, client_url))``."""
+        warnings.warn(
+            "SimulatedTransferService.read(replica, client_url) is deprecated; "
+            "use transfer(TransferRequest(...)) -> TransferResult",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        res = self.transfer(TransferRequest(replica, client_url))
+        return res.payload, res.nbytes, res.seconds
+
+    def read_chunks(
+        self, replica: PhysicalFile, client_url: str
+    ) -> Iterator[Tuple[bytes, int, float]]:
+        """Deprecated: use ``transfer_chunks(TransferRequest(...))``."""
+        warnings.warn(
+            "SimulatedTransferService.read_chunks(replica, client_url) is "
+            "deprecated; use transfer_chunks(TransferRequest(...))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        for ev in self.transfer_chunks(TransferRequest(replica, client_url)):
+            yield ev.payload, ev.nbytes, ev.seconds

@@ -4,7 +4,7 @@ DataBroker.select_many tier parity, and the coalescing BatchScheduler."""
 import numpy as np
 import pytest
 
-from repro.core.broker import NoMatchError, NoReplicaError
+from repro.core.broker import NoMatchError, NoReplicaError, SelectionResult
 from repro.core.classads import parse_classad
 from repro.core.compile import CompileError
 from repro.core.plancache import PlanCache, request_cache_key
@@ -217,7 +217,8 @@ class TestSelectMany:
         b = grid.broker_for("client://host0")
         out = b.select_many([("no-such", None), ("shard-000", None)], strict=False)
         assert isinstance(out[0], NoReplicaError)
-        assert isinstance(out[1], list) and out[1]
+        assert isinstance(out[1], SelectionResult) and out[1]
+        assert out[1].plan is not None and out[1].request_id
         with pytest.raises(NoReplicaError):
             b.select_many([("no-such", None)])
         impossible = parse_classad("requirements = other.loadFactor > 1e30;")

@@ -1,0 +1,404 @@
+"""Resilient multi-replica access: TransferPlan striping, hedging,
+retry/backoff, circuit breakers + GRIS feedback, and the unified
+SelectionResult / TransferRequest→TransferResult API."""
+
+import math
+
+import pytest
+
+from repro.core.broker import SelectionResult, default_read_request
+from repro.core.transferplan import (
+    TransferFailure,
+    TransferPlan,
+    TransferRequest,
+)
+from repro.storage.breaker import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+from repro.storage.endpoint import build_demo_grid
+from repro.storage.faults import FaultEvent, FaultInjector
+from repro.storage.resilient import ResilienceConfig
+from repro.storage.transfer import stream_utilization
+
+DATA = b"q" * (8 << 20)
+REPLICA_EPS = ["gsiftp://ep000", "gsiftp://ep002", "gsiftp://ep005", "gsiftp://ep007"]
+
+
+@pytest.fixture
+def grid():
+    g = build_demo_grid(8, 4, seed=11)
+    g.add_client("client://app", zone="zone1")
+    g.replicate("bulk", DATA, REPLICA_EPS)
+    return g
+
+
+def make_service(g, **res_kw):
+    broker = g.broker_for("client://app")
+    svc = g.resilient_transfer_service(
+        broker, resilience=ResilienceConfig(**res_kw) if res_kw else None
+    )
+    return broker, svc
+
+
+def mirror_grid():
+    """Four comparable replicas (one zone): the setting where striping
+    actually pays and fault-inflation bounds are meaningful."""
+    from repro.storage.endpoint import DataGrid
+
+    g = DataGrid(seed=5)
+    eps = [f"gsiftp://acc{i}" for i in range(4)]
+    for url in eps:
+        g.add_endpoint(url, zone="zoneA")
+    g.add_client("client://app", zone="zoneA")
+    g.replicate("bulk", DATA, eps)
+    return g
+
+
+# ---------------------------------------------------------------- breaker unit
+class TestCircuitBreaker:
+    def test_trips_after_threshold(self):
+        br = CircuitBreaker("ep", failure_threshold=3, reset_s=10.0)
+        assert br.state == CLOSED and br.allows(0.0)
+        br.record_failure(1.0)
+        br.record_failure(2.0)
+        assert br.state == CLOSED  # two of three
+        br.record_failure(3.0)
+        assert br.state == OPEN and br.trips == 1
+        assert not br.allows(4.0)
+
+    def test_success_resets_consecutive_count(self):
+        br = CircuitBreaker("ep", failure_threshold=2)
+        br.record_failure(1.0)
+        br.record_success(2.0)
+        br.record_failure(3.0)
+        assert br.state == CLOSED  # never two *consecutive* failures
+
+    def test_half_open_probe_cycle(self):
+        br = CircuitBreaker("ep", failure_threshold=1, reset_s=10.0)
+        br.record_failure(5.0)
+        assert br.state == OPEN
+        assert not br.allows(14.0)  # still inside the reset window
+        assert br.allows(15.1)  # reset elapsed → half-open probe admitted
+        assert br.state == HALF_OPEN and br.value == 0.5
+        br.record_failure(16.0)  # probe failed → straight back to open
+        assert br.state == OPEN and br.trips == 2
+        assert br.allows(26.1)
+        br.record_success(27.0)  # probe succeeded → closed
+        assert br.state == CLOSED and br.value == 0.0
+
+
+# ------------------------------------------------------------ selection shape
+class TestSelectionResult:
+    def test_select_returns_plan_and_audit_handle(self, grid):
+        b = grid.broker_for("client://app")
+        sel = b.select("bulk")
+        assert isinstance(sel, SelectionResult)
+        # still quacks like the old ranked list
+        assert sel[0].pfn.endpoint in REPLICA_EPS
+        assert len(sel) == len(REPLICA_EPS)
+        assert [rr.rank for rr in sel] == sorted(
+            (rr.rank for rr in sel), reverse=True
+        )
+        # plus the executable plan + decision record
+        assert sel.plan.primary.endpoint == sel[0].pfn.endpoint
+        assert len(sel.plan.replicas) == len(sel)
+        assert sel.plan.request_id == sel.request_id
+        assert b.explain(sel.request_id).chosen == sel[0].pfn.endpoint
+        assert sel.scores and any(s.matched for s in sel.scores)
+
+    def test_select_many_and_placements_share_the_shape(self, grid):
+        b = grid.broker_for("client://app")
+        (out,) = b.select_many([("bulk", None)])
+        assert isinstance(out, SelectionResult)
+        assert out.plan is not None and out.request_id
+        place = b.select_placements(1 << 20, grid.alive_endpoints(), k=2)
+        assert isinstance(place, SelectionResult) and len(place) == 2
+
+    def test_stripe_map_weighted_and_complete(self):
+        from repro.core.catalog import PhysicalFile
+
+        plan = TransferPlan(
+            lfn="f",
+            replicas=[PhysicalFile(f"ep{i}", "/f", 100) for i in range(3)],
+            ranks=[3.0, 2.0, 1.0],
+            predicted=[200.0, 100.0, None],  # third replica is cold
+            stripe_k=3,
+        )
+        smap = plan.stripe_map(12)
+        assert len(smap) == 12 and set(smap) <= {0, 1, 2}
+        counts = [smap.count(s) for s in range(3)]
+        assert counts[0] > counts[1] >= counts[2] > 0  # 2x source owns more
+        # contiguous runs: each stripe reads one consecutive range
+        assert smap == sorted(smap)
+
+
+# ------------------------------------------------- per-endpoint stream shares
+class TestStreamAccounting:
+    def test_concurrent_stripes_share_one_pipe(self, grid, monkeypatch):
+        """k stripes of n streams on ONE endpoint must charge time
+        consistent with a single k*n-stream transfer — utilization is a
+        function of the endpoint's total streams, not per-service."""
+        monkeypatch.setattr(grid.net, "noise", lambda *a: 1.0)  # pin draws
+        svc = grid.transfer_service()
+        ep = grid.endpoints["gsiftp://ep000"]
+        nb = 1 << 20
+        # one transfer holding all 8 streams
+        ep.active_streams = 8
+        t_one8 = svc.chunk_seconds(ep, "client://app", nb, 0.0, 8)
+        # two concurrent stripes of 4 (total 8): each gets U(8)*4/8
+        t_stripe4 = svc.chunk_seconds(ep, "client://app", nb, 0.0, 4)
+        ep.active_streams = 0
+        assert t_stripe4 == pytest.approx(2 * t_one8)
+        # and two 4-stream stripes move 2*nb in t_stripe4 — the same
+        # aggregate U(8) rate, NOT 2*U(4) (the old per-service overcommit)
+        assert stream_utilization(8) < 2 * stream_utilization(4)
+
+    def test_serial_reads_numerically_unchanged(self, grid, monkeypatch):
+        """A lone transfer's share is U(n)*n/n = U(n) — the legacy value."""
+        monkeypatch.setattr(grid.net, "noise", lambda *a: 1.0)
+        svc = grid.transfer_service()
+        ep = grid.endpoints["gsiftp://ep000"]
+        ep.active_streams = 4
+        t = svc.chunk_seconds(ep, "client://app", 1 << 20, 0.0, 4)
+        ep.active_streams = 0
+        bw = grid.net.effective_bandwidth(
+            ep.url, "client://app", 0.0, load_factor=0, disk_rate=ep.disk_rate
+        )
+        assert t == pytest.approx((1 << 20) / (bw * stream_utilization(4)))
+
+    def test_request_n_streams_override(self, grid):
+        pfn = grid.catalog.lookup("bulk")[0]
+        svc = grid.transfer_service()
+        r8 = svc.transfer(TransferRequest(pfn, "client://app", n_streams=8))
+        r4 = svc.transfer(TransferRequest(pfn, "client://app", n_streams=4))
+        assert r8.seconds < r4.seconds
+
+
+# ------------------------------------------------------------------- striping
+class TestStripedExecution:
+    def test_striped_bytes_and_makespan(self, grid):
+        b, svc = make_service(grid)
+        t0 = grid.clock.now()
+        res = svc.fetch("bulk")
+        assert res.payload == DATA and res.nbytes == len(DATA)
+        assert res.stripes == 3  # default stripe_k over 4 replicas
+        # a cold fetch may hedge its slowest stripe onto the 4th replica
+        assert 3 <= len(res.per_replica) <= 4
+        assert set(res.per_replica) <= set(REPLICA_EPS)
+        assert sum(res.per_replica.values()) == len(DATA)
+        # wall time charged is the stripe makespan, not the sum
+        assert res.seconds == pytest.approx(grid.clock.now() - t0)
+
+    def test_striping_beats_single_source(self, grid):
+        b, svc = make_service(grid)
+        warm = svc.fetch("bulk")  # warm per-source history
+        striped = svc.fetch("bulk")
+        twin = build_demo_grid(8, 4, seed=11)
+        twin.add_client("client://app", zone="zone1")
+        twin.replicate("bulk", DATA, REPLICA_EPS)
+        single = twin.transfer_service()
+        pfn = twin.catalog.lookup("bulk")[0]
+        alone = single.transfer(TransferRequest(pfn, "client://app"))
+        assert striped.seconds < alone.seconds
+
+    def test_single_replica_plan_degenerates_to_one_stripe(self, grid):
+        grid.replicate("solo", b"s" * (1 << 20), ["gsiftp://ep001"])
+        b, svc = make_service(grid)
+        res = svc.fetch("solo")
+        assert res.stripes == 1 and res.payload == b"s" * (1 << 20)
+
+    def test_audit_record_annotated(self, grid):
+        b, svc = make_service(grid)
+        res = svc.fetch("bulk")
+        rec = b.explain(b.last_request_id)
+        assert rec.accessed and rec.fetched_from in res.per_replica
+        assert rec.nbytes == len(DATA)
+
+
+# ---------------------------------------------------------- retry and hedging
+class TestRetryAndHedging:
+    def test_flaky_endpoint_retries_with_backoff(self, grid):
+        b, svc = make_service(grid, max_retries=8)
+        for ep in REPLICA_EPS:
+            grid.endpoints[ep].flaky_rate = 0.10
+        res = svc.fetch("bulk")
+        assert res.payload == DATA
+        assert res.retries > 0
+        assert svc._c_retries.value == res.retries
+
+    def test_hedge_rescues_degraded_stripe(self):
+        """Mild degradation (observed < hedge_factor x predicted) while
+        the peers are still busy with their own long queues is hedging's
+        regime — the hedge opens the unused 4th replica, which work
+        stealing (redistribution among *open* stripes) cannot reach."""
+        g = mirror_grid()
+        big = b"h" * (64 << 20)  # work >> per-stripe connection latency
+        g.replicate("big", big, [f"gsiftp://acc{i}" for i in range(4)])
+        b, svc = make_service(g)
+        svc.fetch("bulk")  # warm history → predictions exist
+        slow_ep = b.select("big").plan.primary.endpoint
+        g.endpoints[slow_ep].degradation = 0.3  # below the 0.4 hedge factor
+        res = svc.fetch("big")
+        assert res.payload == big
+        assert res.hedges >= 1 and res.hedge_wins > 0
+
+    def test_retries_exhausted_trips_breaker_and_fails_over(self, grid):
+        b, svc = make_service(grid, max_retries=1, breaker_failures=1)
+        svc.fetch("bulk")
+        sel = b.select("bulk")
+        dead_ep = sel.plan.replicas[1].endpoint
+        grid.endpoints[dead_ep].flaky_rate = 1.0  # every chunk faults
+        res = svc.fetch("bulk")
+        assert res.payload == DATA
+        assert res.failovers >= 1
+        assert svc.breakers.state(dead_ep) == OPEN
+
+
+# --------------------------------------------------- breaker → GRIS feedback
+class TestBreakerFeedback:
+    def test_open_breaker_excluded_from_matchmaking(self, grid):
+        b, svc = make_service(grid, max_retries=0, breaker_failures=1,
+                              breaker_reset_s=500.0)
+        svc.fetch("bulk")
+        target = b.select("bulk").plan.replicas[1].endpoint
+        grid.endpoints[target].flaky_rate = 1.0
+        svc.fetch("bulk")  # trips the breaker on `target`
+        assert svc.breakers.state(target) == OPEN
+        # the endpoint's GRIS now carries our per-source health attr...
+        view = grid.endpoints[target].gris.flattened_view(source="client://app")
+        assert view["breakerOpenToSource"] == 1.0
+        # ...and the default request's requirements gate excludes it while
+        # the endpoint itself is alive and reachable
+        sel = b.select("bulk")
+        assert target not in [rr.pfn.endpoint for rr in sel]
+        assert grid.endpoints[target].alive
+
+    def test_half_open_probe_reenters_matchmaking(self, grid):
+        b, svc = make_service(grid, max_retries=0, breaker_failures=1,
+                              breaker_reset_s=50.0)
+        svc.fetch("bulk")
+        target = b.select("bulk").plan.replicas[1].endpoint
+        grid.endpoints[target].flaky_rate = 1.0
+        svc.fetch("bulk")
+        assert svc.breakers.state(target) == OPEN
+        grid.endpoints[target].flaky_rate = 0.0  # healed
+        grid.clock.advance(60.0)  # past breaker_reset_s
+        b.invalidate_snapshot()
+        res = svc.fetch("bulk")  # republishes 0.5 → selectable probe
+        assert res.payload == DATA
+        # probe succeeded → breaker closed again and GRIS attr cleared
+        assert svc.breakers.state(target) == CLOSED
+        view = grid.endpoints[target].gris.flattened_view(source="client://app")
+        assert view["breakerOpenToSource"] == 0.0
+
+    def test_bandwidth_publish_does_not_wipe_health(self, grid):
+        ep = grid.endpoints["gsiftp://ep000"]
+        ep.gris.publish_source_health("client://app", {"breakerOpenToSource": 1.0})
+        ep.monitor.observe_transfer("read", "client://app", 1 << 20, 1.0, 0.0)
+        view = ep.gris.flattened_view(source="client://app")
+        assert view["breakerOpenToSource"] == 1.0
+        assert view["lastRDBandwidth"] > 0
+
+
+# ------------------------------------------------------- faults & acceptance
+class TestFaultScenarios:
+    def _twin(self):
+        g = build_demo_grid(8, 4, seed=11)
+        g.add_client("client://app", zone="zone1")
+        g.replicate("bulk", DATA, REPLICA_EPS)
+        return g
+
+    def test_kill_mid_transfer_plus_degraded_source(self):
+        """The acceptance scenario: one stripe source killed mid-transfer
+        (via the on_advance fault hook) and another degraded 4x. The
+        striped+hedged read completes with correct bytes within 1.5x the
+        fault-free simulated wall time; the legacy single-source path
+        raises TransferFailure for the killed endpoint."""
+        # fault-free baseline on a twin grid (identical seed/state)
+        base = mirror_grid()
+        bb, bsvc = make_service(base)
+        bsvc.fetch("bulk")  # warm
+        baseline = bsvc.fetch("bulk")
+        assert baseline.payload == DATA
+        s_free = baseline.seconds
+
+        # faulted run: degrade the biggest warm contributor (the broker
+        # has a bandwidth prediction for it → hedging is prediction-driven)
+        # and kill the second-biggest mid-transfer
+        g = mirror_grid()
+        b, svc = make_service(g)
+        inj = FaultInjector(g)
+        svc.on_advance = inj.tick
+        warm = svc.fetch("bulk")  # warm identically
+        contrib = sorted(
+            warm.per_replica, key=lambda u: (warm.per_replica[u], u), reverse=True
+        )
+        slow_ep, kill_ep = contrib[0], contrib[1]
+        g.endpoints[slow_ep].degradation = 0.25  # 4x slow
+        inj.schedule_event(
+            FaultEvent(g.clock.now() + 0.25 * s_free, "kill", kill_ep)
+        )
+        res = svc.fetch("bulk")
+        assert res.payload == DATA  # correct bytes despite both faults
+        assert res.failovers >= 1  # the killed stripe was reassigned
+        assert res.seconds <= 1.5 * s_free
+        assert not g.endpoints[kill_ep].alive  # fault landed mid-transfer
+
+        # legacy single-source against the same faults: dies outright
+        g2 = mirror_grid()
+        inj2 = FaultInjector(g2)
+        xfer = g2.transfer_service()
+        pfn = next(p for p in g2.catalog.lookup("bulk") if p.endpoint == kill_ep)
+        inj2.schedule_event(FaultEvent(g2.clock.now() + 0.05, "kill", kill_ep))
+        with pytest.raises(TransferFailure):
+            for ev in xfer.transfer_chunks(TransferRequest(pfn, "client://app")):
+                inj2.tick()  # the injector fires as the clock advances
+
+    def test_chaos_integrity_and_bounded_inflation(self):
+        """Property test: under a deterministic chaos schedule (degrade +
+        flaky + heal), every striped read returns the exact bytes and
+        total simulated wall time stays within a bounded factor of the
+        fault-free run."""
+        n_fetches = 8
+
+        base = self._twin()
+        _, bsvc = make_service(base)
+        t0 = base.clock.now()
+        for _ in range(n_fetches):
+            assert bsvc.fetch("bulk").payload == DATA
+        s_free = base.clock.now() - t0
+
+        g = self._twin()
+        b, svc = make_service(g, max_retries=6)
+        inj = FaultInjector(g)
+        svc.on_advance = inj.tick
+        inj.chaos(horizon=600.0, mtbf=40.0, mttr=10.0, seed=5,
+                  kinds=("degrade", "flaky"))
+        t0 = g.clock.now()
+        for _ in range(n_fetches):
+            inj.tick()
+            res = svc.fetch("bulk")
+            assert res.payload == DATA  # byte integrity under chaos
+        s_chaos = g.clock.now() - t0
+        assert s_chaos <= 4.0 * s_free  # bounded inflation
+
+    def test_all_replicas_dead_raises(self, grid):
+        b, svc = make_service(grid)
+        sel = b.select("bulk")
+        for ep in REPLICA_EPS:
+            grid.drop_endpoint(ep)
+        with pytest.raises(TransferFailure):
+            svc.execute(sel.plan)
+
+
+# ------------------------------------------------------------ the only shims
+class TestDeprecatedShims:
+    """The ONE place the tuple-returning surface is still exercised."""
+
+    def test_read_and_read_chunks_shims(self, grid):
+        xfer = grid.transfer_service()
+        pfn = grid.catalog.lookup("bulk")[0]
+        with pytest.warns(DeprecationWarning):
+            payload, n, secs = xfer.read(pfn, "client://app")
+        assert payload == DATA and n == len(DATA) and secs > 0
+        with pytest.warns(DeprecationWarning):
+            chunks = list(xfer.read_chunks(pfn, "client://app"))
+        assert b"".join(c for c, _, _ in chunks) == DATA

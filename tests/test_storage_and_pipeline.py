@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.catalog import CatalogError, PhysicalFile, ReplicaCatalog
+from repro.core.transferplan import TransferRequest
 from repro.data.datasets import ShardManifest, SyntheticCorpus, materialize_on_grid
 from repro.data.pipeline import BatchSpec, DataPipeline
 from repro.parallel.elastic import host_shard_assignment
@@ -73,8 +74,9 @@ class TestTransfers:
         grid.store_replica("f", "gsiftp://ep001", data)
         xfer = grid.transfer_service()
         pfn = grid.catalog.lookup("f")[0]
-        payload, n, secs = xfer.read(pfn, "client://c")
-        assert payload == data and n == len(data) and secs > 0
+        res = xfer.transfer(TransferRequest(pfn, "client://c"))
+        assert res.payload == data and res.nbytes == len(data) and res.seconds > 0
+        assert res.per_replica == {"gsiftp://ep001": len(data)}
         # server-side per-source stats published (§3.2)
         ep = grid.endpoints["gsiftp://ep001"]
         assert ep.monitor.per_source["client://c"]["read"].n == 1
@@ -86,7 +88,9 @@ class TestTransfers:
         grid.add_client("client://c", zone="zone0")
         grid.store_replica("f", "gsiftp://ep000", b"z" * (1 << 20))
         t0 = grid.clock.now()
-        grid.transfer_service().read(grid.catalog.lookup("f")[0], "client://c")
+        grid.transfer_service().transfer(
+            TransferRequest(grid.catalog.lookup("f")[0], "client://c")
+        )
         assert grid.clock.now() > t0
 
     def test_fault_schedule(self):
