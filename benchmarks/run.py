@@ -54,6 +54,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        bench_analysis,
         bench_gris,
         bench_kernels,
         bench_matchmaking,
@@ -71,6 +72,7 @@ def main() -> None:
         "pipeline": bench_pipeline,
         "kernels": bench_kernels,
         "transfer": bench_transfer,
+        "analysis": bench_analysis,
     }
 
     from repro.obs import Tracer
@@ -122,6 +124,12 @@ def main() -> None:
     if "transfer_striped_vs_single_speedup" in derived:
         checks.append(("striping over comparable replicas beats single-source",
                        derived["transfer_striped_vs_single_speedup"] >= 1.0))
+    if "analysis_select_overhead" in derived:
+        checks.append(("broker ad_check adds <5% latency to select()",
+                       derived["analysis_select_overhead"] <= 1.05))
+    if "analysis_check_ad" in derived:
+        checks.append(("ad analyzer checks >=1k ads/sec",
+                       derived["analysis_check_ad"] >= 1000))
 
     bad = [c for c, ok in checks if not ok]
     for c, ok in checks:

@@ -1,0 +1,45 @@
+"""Static analysis subsystem: ClassAd/schema checking + repo lint.
+
+Two layers over one diagnostic model (:mod:`.diagnostics`):
+
+* :mod:`.adlint` — type/schema analysis of ClassAd ``requirements``/
+  ``rank`` expressions against the §3 DIT object classes and the
+  attributes GRIS publishes. The broker runs it at select time
+  (``DataBroker(ad_check=...)``) and GRIS at policy registration.
+* :mod:`.codelint` / :mod:`.kernelcheck` — ``ast``-based repo lint:
+  sim-clock determinism, transfer-path robustness, metric cardinality,
+  deprecated APIs, and Pallas BlockSpec alignment.
+
+CLI: ``python -m repro.analysis src/repro --ads examples/ads --json out.json``.
+"""
+
+from .adlint import (
+    check_ad_file,
+    check_ad_text,
+    check_policy_source,
+    check_request_ad,
+    check_resource_ad,
+)
+from .codelint import lint_file, lint_source
+from .diagnostics import Diagnostic, Report, Severity, Span
+from .kernelcheck import check_file as check_kernel_file
+from .kernelcheck import check_source as check_kernel_source
+from .runner import build_report, main
+
+__all__ = [
+    "Diagnostic",
+    "Report",
+    "Severity",
+    "Span",
+    "check_ad_file",
+    "check_ad_text",
+    "check_policy_source",
+    "check_request_ad",
+    "check_resource_ad",
+    "check_kernel_file",
+    "check_kernel_source",
+    "lint_file",
+    "lint_source",
+    "build_report",
+    "main",
+]

@@ -1,0 +1,734 @@
+"""ClassAd static analyzer: type/schema checking for requirements & rank.
+
+The broker matches application request ads against replica capability ads
+built from the GRIS storage schema (paper §4–5). A malformed ad — a typo'd
+attribute, a ``cis`` string compared as a number, an unsatisfiable
+``requirements`` — surfaces at match time only as a silent non-match or a
+0.0 rank. This module catches those *before* they distort selection, by
+checking expressions against the DIT object classes in
+:mod:`repro.core.schema` plus the attributes GRIS actually publishes.
+
+Rules (all diagnostics carry the rule id, severity and location):
+
+  AD101  undefined-attribute      reference to an attribute neither side
+                                  defines or publishes (error for request
+                                  ads; warning when isUndefined-guarded or
+                                  on the resource side, where request
+                                  attributes vary by application)
+  AD102  type-mismatch            a ``cis`` string attribute compared or
+                                  combined as a number (and kin)
+  AD103  unknown-function         call to a function the evaluator lacks
+                                  (evaluates to ``error`` at match time)
+  AD104  unsatisfiable-requirements  requirements can never be True:
+                                  trivially false/undefined, or numeric
+                                  constraints on one attribute contradict
+  AD105  tautological-requirements   requirements is constant True — the
+                                  gate admits everything (often intended;
+                                  warning)
+  AD106  non-discriminating-rank  rank references no resource attribute,
+                                  so every candidate ties at the same value
+  AD107  missing-requirements     request ad has no requirements at all
+  AD108  non-numeric-rank         rank has string/bool/list type — ranks
+                                  as 0.0 for every candidate
+  ADS01  schema-violation         resource ad violates its DIT object
+                                  class (missing MUST attr, wrong syntax)
+  ADS02  syntax-error             ad source text does not parse
+  ADS03  unknown-object-class     objectClass is not a §3 storage class
+
+Entry points: :func:`check_request_ad`, :func:`check_resource_ad`,
+:func:`check_policy_source`, :func:`check_ad_text` (adds line spans), and
+:func:`check_ad_file`.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.core.classads import (
+    AttrRef,
+    BinOp,
+    ClassAd,
+    ClassAdSyntaxError,
+    Expr,
+    FuncCall,
+    Index,
+    ListExpr,
+    Literal,
+    Select,
+    Ternary,
+    UnaryOp,
+    Undefined,
+    Error,
+    evaluate,
+    parse_classad,
+)
+from repro.core.schema import OBJECT_CLASSES, SchemaError, validate_entry
+
+from .diagnostics import Diagnostic, Severity, Span
+
+__all__ = [
+    "RESOURCE_SCHEMA",
+    "REQUEST_SCHEMA",
+    "check_request_ad",
+    "check_resource_ad",
+    "check_policy_source",
+    "check_ad_text",
+    "check_ad_file",
+    "detect_perspective",
+]
+
+
+# ---------------------------------------------------------------------------
+# Attribute universes
+# ---------------------------------------------------------------------------
+
+_SYNTAX_TYPE = {"cisfloat": "number", "cis": "string"}
+
+
+def _schema_attrs() -> Dict[str, str]:
+    """lowercase attribute → inferred type, over every §3 object class."""
+    out: Dict[str, str] = {}
+    for oc in OBJECT_CLASSES.values():
+        for spec in oc.must + oc.may:
+            out[spec.name.lower()] = _SYNTAX_TYPE[spec.syntax]
+    return out
+
+
+#: Everything a replica-side ad can define: the §3 DIT object classes plus
+#: the attributes the broker's Search Phase and the resilient layer attach
+#: to the flattened GRIS view (endpoint/replica identity, breaker health).
+RESOURCE_SCHEMA: Dict[str, str] = {
+    **_schema_attrs(),
+    "dn": "string",
+    "objectclass": "any",  # string or list of strings in flattened views
+    "endpoint": "string",
+    "name": "string",
+    "url": "string",
+    "type": "string",
+    "replicapath": "string",
+    "replicasize": "number",
+    "breakeropentosource": "number",
+    "requirements": "bool",
+    "rank": "number",
+}
+
+#: Request-side attributes the shipped request builders publish — what a
+#: site ``requirements`` policy can reference through ``other.``.
+REQUEST_SCHEMA: Dict[str, str] = {
+    "clienturl": "string",
+    "requrl": "string",
+    "reqdspace": "number",
+    "reqdrdbandwidth": "number",
+    "reqdwrbandwidth": "number",
+    "requirements": "bool",
+    "rank": "number",
+}
+
+#: Builtin → result type (see classads.BUILTINS; all deterministic).
+_FN_RESULT: Dict[str, str] = {}
+for _n in ("abs", "floor", "ceiling", "ceil", "round", "pow", "sqrt", "log",
+           "exp", "int", "real", "strlen", "size", "time", "min", "max",
+           "sum", "avg"):
+    _FN_RESULT[_n] = "number"
+for _n in ("string", "strcat", "substr", "tolower", "toupper"):
+    _FN_RESULT[_n] = "string"
+for _n in ("regexp", "member", "isundefined", "iserror", "isboolean",
+           "isinteger", "isreal", "isstring", "islist"):
+    _FN_RESULT[_n] = "bool"
+_FN_RESULT["ifthenelse"] = "branch"
+
+_NUMERIC_ARG_FNS = frozenset(
+    {"abs", "floor", "ceiling", "ceil", "round", "pow", "sqrt", "log", "exp"}
+)
+_STRING_ARG_FNS = frozenset({"strlen", "tolower", "toupper"})
+_GUARD_FNS = frozenset({"isundefined", "iserror"})
+
+_CMP = {"==", "!=", "<", "<=", ">", ">="}
+_ARITH = {"+", "-", "*", "/", "%"}
+_FLIP = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "==": "==", "!=": "!="}
+
+
+def _type_of_value(v: Any) -> str:
+    if isinstance(v, bool):
+        return "bool"
+    if isinstance(v, (int, float)):
+        return "number"
+    if isinstance(v, str):
+        return "string"
+    if isinstance(v, list):
+        return "list"
+    if isinstance(v, ClassAd):
+        return "ad"
+    return "any"  # Undefined / Error sentinels
+
+
+def _has_refs(expr: Expr) -> bool:
+    if isinstance(expr, AttrRef):
+        return True
+    if isinstance(expr, UnaryOp):
+        return _has_refs(expr.operand)
+    if isinstance(expr, BinOp):
+        return _has_refs(expr.left) or _has_refs(expr.right)
+    if isinstance(expr, Ternary):
+        return any(_has_refs(e) for e in (expr.cond, expr.then, expr.other))
+    if isinstance(expr, FuncCall):
+        return any(_has_refs(a) for a in expr.args)
+    if isinstance(expr, ListExpr):
+        return any(_has_refs(e) for e in expr.items)
+    if isinstance(expr, (Select, Index)):
+        return True  # conservatively dynamic
+    return False
+
+
+def _fold(expr: Expr) -> Optional[Any]:
+    """Constant-fold a ref-free expression; None when not foldable."""
+    if _has_refs(expr):
+        return None
+    try:
+        return evaluate(expr, ClassAd(), None, {"now": 0.0})
+    except Exception:  # pragma: no cover - evaluator never raises
+        return None
+
+
+def _conjuncts(expr: Expr) -> List[Expr]:
+    if isinstance(expr, BinOp) and expr.op == "&&":
+        return _conjuncts(expr.left) + _conjuncts(expr.right)
+    return [expr]
+
+
+# ---------------------------------------------------------------------------
+# The expression checker
+# ---------------------------------------------------------------------------
+
+
+class _AdChecker:
+    """Shared machinery for request- and resource-perspective checks."""
+
+    def __init__(
+        self,
+        ad: ClassAd,
+        *,
+        perspective: str,  # 'request' | 'resource'
+        name: str,
+        self_fallback: Optional[Dict[str, str]] = None,
+    ):
+        self.ad = ad
+        self.perspective = perspective
+        self.name = name
+        self.other_schema = (
+            RESOURCE_SCHEMA if perspective == "request" else REQUEST_SCHEMA
+        )
+        self.self_fallback = self_fallback or {}
+        self.diags: List[Diagnostic] = []
+        self.guarded: Set[Tuple[str, str]] = set()
+        self._reported_undef: Set[Tuple[str, str]] = set()
+        self._self_types: Dict[str, str] = {}
+        self._inferring: Set[str] = set()
+        self._resource_refs = 0  # refs resolving to the resource side
+        self._current_attr: Optional[str] = None
+
+    # ------------------------------------------------------------- helpers
+    def _emit(self, rule: str, severity: Severity, message: str,
+              source: Optional[str] = None) -> None:
+        self.diags.append(
+            Diagnostic(rule, severity, message, file=self.name,
+                       attr=self._current_attr, source=source)
+        )
+
+    def _collect_guards(self, expr: Expr) -> None:
+        if isinstance(expr, FuncCall) and expr.name.lower() in _GUARD_FNS:
+            for a in expr.args:
+                if isinstance(a, AttrRef):
+                    self.guarded.add((a.scope or "", a.name.lower()))
+            return
+        for child in _children(expr):
+            self._collect_guards(child)
+
+    def _self_type(self, key: str) -> Optional[str]:
+        """Type of one of the ad's own attributes (lazy, cycle-guarded)."""
+        if key in self._self_types:
+            return self._self_types[key]
+        expr = self.ad.lookup_expr(key)
+        if expr is None:
+            return self.self_fallback.get(key)
+        if key in self._inferring:
+            return "any"
+        self._inferring.add(key)
+        try:
+            t = self.infer(expr)
+        finally:
+            self._inferring.discard(key)
+        self._self_types[key] = t
+        return t
+
+    def _undef(self, ref: AttrRef, side: str) -> None:
+        key = (ref.scope or "", ref.name.lower())
+        if key in self._reported_undef:
+            return
+        self._reported_undef.add(key)
+        guarded = key in self.guarded or ("", key[1]) in self.guarded
+        if self.perspective == "resource" or guarded:
+            sev = Severity.WARNING
+        else:
+            sev = Severity.ERROR
+        extra = " (isUndefined-guarded)" if guarded else ""
+        self._emit(
+            "AD101",
+            sev,
+            f"reference to undefined attribute {ref!r}: not in the {side} "
+            f"schema nor defined by this ad{extra}",
+            source=repr(ref),
+        )
+
+    # ------------------------------------------------------------ inference
+    def infer(self, expr: Expr) -> str:
+        """Infer the expression's type, emitting diagnostics on the way."""
+        if isinstance(expr, Literal):
+            return _type_of_value(expr.value)
+        if isinstance(expr, AttrRef):
+            return self._infer_ref(expr)
+        if isinstance(expr, UnaryOp):
+            t = self.infer(expr.operand)
+            if expr.op == "!" and t in ("number", "string"):
+                self._emit("AD102", Severity.ERROR,
+                           f"logical ! applied to a {t} operand", repr(expr))
+            elif expr.op in ("-", "+") and t in ("string", "bool"):
+                self._emit("AD102", Severity.ERROR,
+                           f"arithmetic {expr.op} applied to a {t} operand",
+                           repr(expr))
+            return "bool" if expr.op == "!" else "number"
+        if isinstance(expr, BinOp):
+            return self._infer_binop(expr)
+        if isinstance(expr, Ternary):
+            ct = self.infer(expr.cond)
+            if ct in ("number", "string"):
+                self._emit("AD102", Severity.ERROR,
+                           f"ternary condition has {ct} type", repr(expr.cond))
+            return _union(self.infer(expr.then), self.infer(expr.other))
+        if isinstance(expr, FuncCall):
+            return self._infer_call(expr)
+        if isinstance(expr, ListExpr):
+            for item in expr.items:
+                self.infer(item)
+            return "list"
+        if isinstance(expr, Select):
+            self.infer(expr.base)
+            return "any"
+        if isinstance(expr, Index):
+            self.infer(expr.base)
+            self.infer(expr.index)
+            return "any"
+        return "any"  # pragma: no cover - all node kinds handled
+
+    def _infer_ref(self, ref: AttrRef) -> str:
+        key = ref.name.lower()
+        if ref.scope == "other":
+            t = self.other_schema.get(key)
+            if t is None:
+                other_side = "resource" if self.perspective == "request" else "request"
+                self._undef(ref, other_side)
+                return "any"
+            if self.perspective == "request":
+                self._resource_refs += 1
+            return t
+        # my./unqualified: self first, then (unqualified only) the far side
+        t = self._self_type(key)
+        if t is not None:
+            return t
+        if ref.scope is None:
+            t = self.other_schema.get(key)
+            if t is not None:
+                if self.perspective == "request":
+                    self._resource_refs += 1
+                return t
+        self._undef(ref, "request" if self.perspective == "request" else "resource")
+        return "any"
+
+    def _infer_binop(self, expr: BinOp) -> str:
+        op = expr.op
+        if op in ("&&", "||"):
+            for side in (expr.left, expr.right):
+                t = self.infer(side)
+                if t in ("number", "string"):
+                    self._emit(
+                        "AD102", Severity.ERROR,
+                        f"non-boolean {t} operand to {op} "
+                        "(evaluates to error at match time)",
+                        repr(side),
+                    )
+            return "bool"
+        if op in ("=?=", "=!="):
+            self.infer(expr.left)
+            self.infer(expr.right)
+            return "bool"
+        lt, rt = self.infer(expr.left), self.infer(expr.right)
+        if op in _CMP:
+            if {lt, rt} == {"number", "string"}:
+                sattr = expr.left if lt == "string" else expr.right
+                self._emit(
+                    "AD102", Severity.ERROR,
+                    f"{sattr!r} is a cis string but is compared with a "
+                    "number (always evaluates to error)",
+                    repr(expr),
+                )
+            elif "bool" in (lt, rt) and op not in ("==", "!=") and \
+                    {lt, rt} <= {"bool", "number", "string"} and lt != rt:
+                self._emit("AD102", Severity.ERROR,
+                           f"ordered comparison {op} between {lt} and {rt}",
+                           repr(expr))
+            return "bool"
+        if op in _ARITH:
+            if op == "+" and lt == "string" and rt == "string":
+                return "string"
+            for t, side in ((lt, expr.left), (rt, expr.right)):
+                if t in ("string", "bool", "list", "ad"):
+                    self._emit(
+                        "AD102", Severity.ERROR,
+                        f"arithmetic {op} on a {t} operand "
+                        f"({side!r} is not numeric)",
+                        repr(expr),
+                    )
+            return "number"
+        return "any"  # pragma: no cover - parser emits only known ops
+
+    def _infer_call(self, call: FuncCall) -> str:
+        fname = call.name.lower()
+        if fname in _GUARD_FNS:
+            # guard tests are total; their args are deliberately optional
+            return "bool"
+        result = _FN_RESULT.get(fname)
+        if result is None:
+            self._emit(
+                "AD103", Severity.ERROR,
+                f"call to unknown function {call.name!r} "
+                "(evaluates to error at match time)",
+                repr(call),
+            )
+            for a in call.args:
+                self.infer(a)
+            return "any"
+        arg_types = [self.infer(a) for a in call.args]
+        if fname in _NUMERIC_ARG_FNS:
+            for t, a in zip(arg_types, call.args):
+                if t in ("string", "bool", "list", "ad"):
+                    self._emit("AD102", Severity.ERROR,
+                               f"{fname}() expects numeric arguments, got {t}",
+                               repr(a))
+        elif fname in _STRING_ARG_FNS:
+            for t, a in zip(arg_types, call.args):
+                if t in ("number", "bool", "list", "ad"):
+                    self._emit("AD102", Severity.ERROR,
+                               f"{fname}() expects a string argument, got {t}",
+                               repr(a))
+        if result == "branch":
+            return _union(arg_types[1], arg_types[2]) if len(arg_types) == 3 else "any"
+        return result
+
+    # --------------------------------------------- requirements-level rules
+    def check_requirements(self) -> None:
+        self._current_attr = "requirements"
+        expr = self.ad.lookup_expr("requirements")
+        if expr is None:
+            if self.perspective == "request":
+                self._emit(
+                    "AD107", Severity.WARNING,
+                    "request has no requirements expression; every replica "
+                    "matches unconditionally",
+                )
+            self._current_attr = None
+            return
+        t = self.infer(expr)
+        if t in ("number", "string"):
+            self._emit("AD102", Severity.ERROR,
+                       f"requirements has {t} type; a match needs a boolean")
+        folded = _fold(expr)
+        if folded is True:
+            self._emit(
+                "AD105", Severity.WARNING,
+                "requirements is constantly True — the gate admits every "
+                "candidate",
+                source=repr(expr),
+            )
+        elif folded is False:
+            self._emit("AD104", Severity.ERROR,
+                       "requirements is constantly False — nothing can ever "
+                       "match", source=repr(expr))
+        elif folded is Undefined or folded is Error:
+            self._emit("AD104", Severity.ERROR,
+                       f"requirements constantly evaluates to {folded!r} — "
+                       "a match treats that as a failed gate",
+                       source=repr(expr))
+        else:
+            reason = _unsat_reason(expr)
+            if reason is not None:
+                self._emit("AD104", Severity.ERROR,
+                           f"requirements is unsatisfiable: {reason}",
+                           source=repr(expr))
+        self._current_attr = None
+
+    def check_rank(self) -> None:
+        self._current_attr = "rank"
+        expr = self.ad.lookup_expr("rank")
+        if expr is None:
+            self._current_attr = None
+            return
+        before = self._resource_refs
+        t = self.infer(expr)
+        if t in ("string", "bool", "list", "ad"):
+            self._emit(
+                "AD108", Severity.ERROR,
+                f"rank has {t} type — every candidate ranks 0.0",
+                source=repr(expr),
+            )
+        elif self.perspective == "request" and self._resource_refs == before:
+            self._emit(
+                "AD106", Severity.WARNING,
+                "rank references no resource attribute — every candidate "
+                "ties at the same value (selection falls to the name "
+                "tiebreak)",
+                source=repr(expr),
+            )
+        self._current_attr = None
+
+    # -------------------------------------------------------------- driver
+    def run(self) -> List[Diagnostic]:
+        for key, expr in self.ad.items():
+            self._collect_guards(expr)
+        self.check_requirements()
+        self.check_rank()
+        # reference/type-check the remaining attributes too (a typo in a
+        # helper attribute propagates Undefined into whoever reads it)
+        for key, expr in self.ad.items():
+            if key.lower() in ("requirements", "rank"):
+                continue
+            self._current_attr = key
+            self.infer(expr)
+            self._current_attr = None
+        return self.diags
+
+
+def _union(a: str, b: str) -> str:
+    return a if a == b else "any"
+
+
+def _children(expr: Expr) -> Sequence[Expr]:
+    if isinstance(expr, UnaryOp):
+        return (expr.operand,)
+    if isinstance(expr, BinOp):
+        return (expr.left, expr.right)
+    if isinstance(expr, Ternary):
+        return (expr.cond, expr.then, expr.other)
+    if isinstance(expr, FuncCall):
+        return expr.args
+    if isinstance(expr, ListExpr):
+        return expr.items
+    if isinstance(expr, Select):
+        return (expr.base,)
+    if isinstance(expr, Index):
+        return (expr.base, expr.index)
+    return ()
+
+
+# ---------------------------------------------------------------------------
+# Unsatisfiability: interval analysis over top-level conjuncts
+# ---------------------------------------------------------------------------
+
+
+def _unsat_reason(expr: Expr) -> Optional[str]:
+    """A human-readable reason when the conjunction cannot hold, else None.
+
+    Handles the decidable fragment that actually appears in ads: numeric
+    comparisons of one attribute against literals, joined by ``&&``. Two
+    conjuncts like ``x > 10G && x < 1G`` intersect to an empty interval.
+    """
+    bounds: Dict[Tuple[str, str], Dict[str, Any]] = {}
+    for conj in _conjuncts(expr):
+        folded = _fold(conj)
+        if folded is False:
+            return f"conjunct {conj!r} is constantly False"
+        if folded is Undefined or folded is Error:
+            return f"conjunct {conj!r} constantly evaluates to {folded!r}"
+        c = _as_constraint(conj)
+        if c is None:
+            continue
+        key, op, val = c
+        b = bounds.setdefault(
+            key, {"lo": float("-inf"), "lo_strict": False,
+                  "hi": float("inf"), "hi_strict": False, "eq": None}
+        )
+        if op in (">", ">="):
+            strict = op == ">"
+            if val > b["lo"] or (val == b["lo"] and strict):
+                b["lo"], b["lo_strict"] = val, strict
+        elif op in ("<", "<="):
+            strict = op == "<"
+            if val < b["hi"] or (val == b["hi"] and strict):
+                b["hi"], b["hi_strict"] = val, strict
+        elif op == "==":
+            if b["eq"] is not None and b["eq"] != val:
+                return (f"{key[1]} must equal both {b['eq']:g} and {val:g}")
+            b["eq"] = val
+    for (scope, name), b in bounds.items():
+        lo, hi = b["lo"], b["hi"]
+        if lo > hi or (lo == hi and (b["lo_strict"] or b["hi_strict"])):
+            ref = f"{scope}.{name}" if scope else name
+            return (
+                f"{ref} is constrained to the empty interval "
+                f"{'(' if b['lo_strict'] else '['}{lo:g}, {hi:g}"
+                f"{')' if b['hi_strict'] else ']'}"
+            )
+        if b["eq"] is not None:
+            v = b["eq"]
+            if (v < lo or (v == lo and b["lo_strict"])
+                    or v > hi or (v == hi and b["hi_strict"])):
+                ref = f"{scope}.{name}" if scope else name
+                return f"{ref} == {v:g} contradicts its interval bounds"
+    return None
+
+
+def _as_constraint(conj: Expr) -> Optional[Tuple[Tuple[str, str], str, float]]:
+    """``ref op number-literal`` (either order) → ((scope, name), op, val)."""
+    if not (isinstance(conj, BinOp) and conj.op in _CMP and conj.op != "!="):
+        return None
+    left, right, op = conj.left, conj.right, conj.op
+    if isinstance(left, Literal) and isinstance(right, AttrRef):
+        left, right, op = right, left, _FLIP[op]
+    if not (isinstance(left, AttrRef) and isinstance(right, Literal)):
+        return None
+    v = right.value
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None
+    return ((left.scope or "", left.name.lower()), op, float(v))
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def check_request_ad(ad: ClassAd, *, name: str = "<request>") -> List[Diagnostic]:
+    """Analyze an application request ad against the published resource
+    schema. ``other.`` references resolve to the §3 DIT attributes (plus
+    the broker-attached extras); unqualified references resolve to the
+    ad's own attributes first, then the resource side — Condor's lookup
+    order inside a MatchClassAd."""
+    return _AdChecker(ad, perspective="request", name=name).run()
+
+
+def check_resource_ad(ad: ClassAd, *, name: str = "<resource>") -> List[Diagnostic]:
+    """Analyze a replica capability ad: DIT schema validation of its
+    literal attributes plus expression analysis of its site policy
+    (``requirements``) from the resource perspective, where ``other.``
+    references the request."""
+    diags = _schema_check(ad, name=name)
+    checker = _AdChecker(
+        ad, perspective="resource", name=name, self_fallback=RESOURCE_SCHEMA
+    )
+    diags.extend(checker.run())
+    return diags
+
+
+def check_policy_source(source: str, *, name: str = "<policy>") -> List[Diagnostic]:
+    """Analyze a site ``requirements`` policy string (what an admin puts
+    in the GRIS static configuration) without a full ad around it."""
+    ad = ClassAd()
+    try:
+        ad.set_expr("requirements", source)
+    except ClassAdSyntaxError as e:
+        return [Diagnostic("ADS02", Severity.ERROR,
+                           f"policy does not parse: {e}", file=name,
+                           attr="requirements", source=source)]
+    checker = _AdChecker(
+        ad, perspective="resource", name=name, self_fallback=RESOURCE_SCHEMA
+    )
+    checker.run()
+    return checker.diags
+
+
+def _schema_check(ad: ClassAd, *, name: str) -> List[Diagnostic]:
+    """Validate the ad's literal attributes against its DIT object class."""
+    entry: Dict[str, Any] = {}
+    for key, expr in ad.items():
+        if isinstance(expr, Literal) and not isinstance(expr.value, ClassAd):
+            entry[key] = expr.value
+    oc_val = entry.get("objectClass", entry.get("objectclass"))
+    if oc_val is None:
+        for key in entry:
+            if key.lower() == "objectclass":
+                oc_val = entry[key]
+                break
+    diags: List[Diagnostic] = []
+    if oc_val is None:
+        return diags  # bare capability ad without a declared class: skip
+    oc_names = oc_val if isinstance(oc_val, list) else [oc_val]
+    for oc_name in oc_names:
+        oc = OBJECT_CLASSES.get(str(oc_name).lower())
+        if oc is None:
+            diags.append(Diagnostic(
+                "ADS03", Severity.WARNING,
+                f"objectClass {oc_name!r} is not a §3 storage class",
+                file=name, attr="objectClass"))
+            continue
+        try:
+            validate_entry(entry, oc)
+        except SchemaError as e:
+            diags.append(Diagnostic(
+                "ADS01", Severity.ERROR,
+                f"schema violation for {oc.name}: {e}", file=name))
+    return diags
+
+
+#: attributes whose presence marks a resource-side (capability) ad
+_RESOURCE_MARKERS = frozenset(
+    {"objectclass", "totalspace", "availablespace", "mountpoint",
+     "disktransferrate", "maxrdbandwidth", "avgrdbandwidth"}
+)
+
+
+def detect_perspective(ad: ClassAd) -> str:
+    """'resource' when the ad carries storage-schema attributes, else
+    'request'."""
+    for key in ad.keys():
+        if key.lower() in _RESOURCE_MARKERS:
+            return "resource"
+    return "request"
+
+
+_ATTR_LINE_RE = re.compile(r"^\s*([A-Za-z_][A-Za-z0-9_]*)\s*=")
+
+
+def check_ad_text(
+    text: str, *, name: str = "<ad>", perspective: Optional[str] = None
+) -> List[Diagnostic]:
+    """Analyze ad source text; diagnostics gain line spans located at the
+    offending attribute's assignment."""
+    try:
+        ad = parse_classad(text)
+    except ClassAdSyntaxError as e:
+        line = text.count("\n", 0, getattr(e, "pos", 0)) + 1
+        return [Diagnostic("ADS02", Severity.ERROR,
+                           f"ad does not parse: {e}", file=name,
+                           span=Span(line, 1))]
+    if perspective is None:
+        perspective = detect_perspective(ad)
+    if perspective == "resource":
+        diags = check_resource_ad(ad, name=name)
+    else:
+        diags = check_request_ad(ad, name=name)
+    # locate each flagged attribute's assignment line for the span
+    attr_lines: Dict[str, int] = {}
+    for i, line_text in enumerate(text.splitlines(), start=1):
+        m = _ATTR_LINE_RE.match(line_text)
+        if m:
+            attr_lines.setdefault(m.group(1).lower(), i)
+    for d in diags:
+        if d.span is None and d.attr and d.attr.lower() in attr_lines:
+            d.span = Span(attr_lines[d.attr.lower()], 1)
+    return diags
+
+
+def check_ad_file(path: str, *, name: Optional[str] = None) -> List[Diagnostic]:
+    with open(path) as f:
+        text = f.read()
+    return check_ad_text(text, name=name or path)

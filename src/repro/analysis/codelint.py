@@ -1,0 +1,394 @@
+"""Repo lint: ``ast``-based rules for the repo's hardest-won invariants.
+
+The transfer/resilience stack is deterministic **by construction**: every
+timestamp flows from an injected :class:`~repro.core.gris.Clock` and every
+random draw from an explicitly seeded generator. One ``time.time()`` in a
+sim path silently breaks replayability. These rules keep that invariant —
+plus a few robustness/hygiene properties — machine-checked.
+
+Rules:
+
+  SIM001  wallclock-leak        ``time.time()``/``perf_counter``/
+                                ``datetime.now()``… used directly. Error in
+                                sim paths (storage/, core/, serve/), warning
+                                elsewhere. Where wall time is genuinely
+                                intended (obs tracing defaults, launch
+                                CLIs), mark the line ``# lint: allow-wallclock``.
+  SIM002  unseeded-random       stdlib ``random`` module functions or
+                                global-state ``numpy.random`` samplers
+                                (``np.random.default_rng(seed)`` and
+                                ``jax.random`` are fine — both are
+                                explicitly seeded).
+  TRF001  unbounded-retry       a ``while True`` loop in a transfer path
+                                with no ``break``/``return``/``raise`` —
+                                a retry loop that can never give up.
+  TRF002  bare-except           ``except:`` (error in transfer paths,
+                                warning elsewhere); also flags
+                                swallow-all ``except Exception: pass``
+                                in transfer paths.
+  OBS001  unbounded-metric-labels  a metric registered with a label drawn
+                                from an unbounded domain (endpoint/url/
+                                lfn/…) with a non-literal value.
+  DEP001  deprecated-tuple-read call to the deprecated tuple-returning
+                                ``read(replica, client_url)`` /
+                                ``read_chunks(...)`` shims; use
+                                ``transfer(TransferRequest(...))``.
+
+Suppression: append ``# lint: allow-<tag>`` to the offending line (tags:
+``wallclock``, ``random``, ``retry``, ``bare-except``, ``metric-labels``,
+``deprecated``, ``kernel``, or ``all``). Suppressions are deliberate and
+reviewable — they are the "explicit allowlist" of the determinism policy.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from .diagnostics import Diagnostic, Severity, Span
+
+__all__ = ["LintContext", "lint_source", "lint_file", "RULES"]
+
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*(allow-[a-z0-9_,\s-]+)")
+
+#: wall-clock functions of the ``time`` module
+_TIME_WALLCLOCK = frozenset(
+    {"time", "time_ns", "perf_counter", "perf_counter_ns", "monotonic",
+     "monotonic_ns", "process_time", "process_time_ns", "sleep",
+     "localtime", "gmtime", "ctime"}
+)
+#: nondeterministic constructors on ``datetime``/``date``
+_DATETIME_WALLCLOCK = frozenset({"now", "utcnow", "today"})
+#: global-state samplers of the stdlib ``random`` module
+_RANDOM_FNS = frozenset(
+    {"random", "randint", "randrange", "uniform", "choice", "choices",
+     "shuffle", "sample", "gauss", "normalvariate", "expovariate",
+     "betavariate", "triangular", "seed", "getrandbits", "randbytes"}
+)
+#: ``numpy.random`` attributes that are explicitly seeded constructions
+_NP_RANDOM_SAFE = frozenset(
+    {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+     "MT19937", "BitGenerator", "RandomState"}
+)
+#: label names whose value domain is unbounded (URLs, files, requests)
+_HIGH_CARDINALITY_LABELS = frozenset(
+    {"endpoint", "client", "client_url", "url", "lfn", "path",
+     "request_id", "source", "dn", "replica", "query"}
+)
+_METRIC_FACTORIES = frozenset({"counter", "gauge", "histogram"})
+_METRIC_NON_LABEL_KWARGS = frozenset({"help", "buckets"})
+
+
+@dataclass
+class LintContext:
+    """Per-file state shared by every rule."""
+
+    relpath: str
+    text: str
+    tree: ast.AST
+    lines: List[str] = field(default_factory=list)
+    diags: List[Diagnostic] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.lines:
+            self.lines = self.text.splitlines()
+        parts = set(self.relpath.replace("\\", "/").split("/"))
+        self.is_sim_path = bool(parts & {"storage", "core", "serve"})
+        self.is_transfer_path = "storage" in parts
+        self.is_kernel_path = "kernels" in parts
+
+    # ------------------------------------------------------------ allowlist
+    def allowed(self, lineno: int, tag: str) -> bool:
+        if not (1 <= lineno <= len(self.lines)):
+            return False
+        m = _ALLOW_RE.search(self.lines[lineno - 1])
+        if not m:
+            return False
+        tags = {t.strip()[len("allow-"):] for t in m.group(1).split(",")
+                if t.strip().startswith("allow-")}
+        return tag in tags or "all" in tags
+
+    # ------------------------------------------------------------- emission
+    def emit(
+        self,
+        rule: str,
+        severity: Severity,
+        message: str,
+        node: ast.AST,
+        tag: str,
+        lineno: Optional[int] = None,
+    ) -> None:
+        line = lineno or getattr(node, "lineno", 1)
+        if self.allowed(line, tag):
+            return
+        col = getattr(node, "col_offset", 0) + 1 if lineno is None else 1
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) else None
+        self.diags.append(
+            Diagnostic(rule, severity, message, file=self.relpath,
+                       span=Span(line, col), source=snippet)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Import alias maps (computed once, used by both SIM rules)
+# ---------------------------------------------------------------------------
+
+
+def _alias_maps(tree: ast.AST) -> Dict[str, Dict[str, str]]:
+    """module → {bound-name: original-name} for the modules we care about."""
+    mods = {"time": {}, "datetime": {}, "random": {}, "numpy": {}}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                if root in mods:
+                    mods[root][alias.asname or root] = "__module__"
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            root = node.module.split(".")[0]
+            if root in mods:
+                for alias in node.names:
+                    mods[root][alias.asname or alias.name] = alias.name
+    return mods
+
+
+def _attr_on_module(
+    node: ast.AST, module_aliases: Dict[str, str]
+) -> Optional[str]:
+    """``alias.attr`` where alias is a tracked module binding → attr name."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and module_aliases.get(node.value.id) == "__module__"
+    ):
+        return node.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+def rule_sim001_wallclock(ctx: LintContext) -> None:
+    mods = _alias_maps(ctx.tree)
+    sev = Severity.ERROR if ctx.is_sim_path else Severity.WARNING
+    hint = (
+        "route through the injected Clock / tracer time_fn, or mark the "
+        "line '# lint: allow-wallclock' if wall time is intended"
+    )
+    from_time = {n: orig for n, orig in mods["time"].items()
+                 if orig in _TIME_WALLCLOCK}
+    from_dt = {n: orig for n, orig in mods["datetime"].items()
+               if orig in ("datetime", "date")}
+    for node in ast.walk(ctx.tree):
+        attr = _attr_on_module(node, mods["time"])
+        if attr in _TIME_WALLCLOCK:
+            ctx.emit("SIM001", sev,
+                     f"wall-clock call time.{attr} — {hint}", node, "wallclock")
+            continue
+        if isinstance(node, ast.Name) and node.id in from_time:
+            ctx.emit("SIM001", sev,
+                     f"wall-clock call time.{from_time[node.id]} — {hint}",
+                     node, "wallclock")
+            continue
+        if isinstance(node, ast.Attribute) and node.attr in _DATETIME_WALLCLOCK:
+            base = node.value
+            if isinstance(base, ast.Name) and base.id in from_dt:
+                ctx.emit("SIM001", sev,
+                         f"wall-clock call {from_dt[base.id]}.{node.attr}() — "
+                         f"{hint}", node, "wallclock")
+            elif _attr_on_module(base, mods["datetime"]) in ("datetime", "date"):
+                ctx.emit("SIM001", sev,
+                         f"wall-clock call datetime.{node.attr}() — {hint}",
+                         node, "wallclock")
+
+
+def rule_sim002_random(ctx: LintContext) -> None:
+    mods = _alias_maps(ctx.tree)
+    sev = Severity.ERROR if ctx.is_sim_path else Severity.WARNING
+    hint = (
+        "use an explicitly seeded generator (np.random.default_rng(seed), "
+        "random.Random(seed)) or mark '# lint: allow-random'"
+    )
+    from_random = {n: orig for n, orig in mods["random"].items()
+                   if orig in _RANDOM_FNS}
+    for node in ast.walk(ctx.tree):
+        attr = _attr_on_module(node, mods["random"])
+        if attr in _RANDOM_FNS:
+            ctx.emit("SIM002", sev,
+                     f"global-state random.{attr} — {hint}", node, "random")
+            continue
+        if isinstance(node, ast.Name) and node.id in from_random:
+            ctx.emit("SIM002", sev,
+                     f"global-state random.{from_random[node.id]} — {hint}",
+                     node, "random")
+            continue
+        # np.random.<sampler> — global MT19937 state
+        if (
+            isinstance(node, ast.Attribute)
+            and node.attr not in _NP_RANDOM_SAFE
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "random"
+            and _attr_on_module(node.value, mods["numpy"]) == "random"
+        ):
+            ctx.emit("SIM002", sev,
+                     f"global-state numpy.random.{node.attr} — {hint}",
+                     node, "random")
+
+
+def _loop_can_exit(loop: ast.While) -> bool:
+    """Does the loop body contain a break (of *this* loop), return or raise?"""
+
+    def scan(nodes, in_nested_loop: bool) -> bool:
+        for n in nodes:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue  # a nested def's return doesn't exit the loop
+            if isinstance(n, ast.Break) and not in_nested_loop:
+                return True
+            if isinstance(n, (ast.Return, ast.Raise)):
+                return True
+            nested = in_nested_loop or isinstance(n, (ast.While, ast.For))
+            if scan(ast.iter_child_nodes(n), nested):
+                return True
+        return False
+
+    return scan(loop.body, False)
+
+
+def rule_trf001_unbounded_retry(ctx: LintContext) -> None:
+    if not ctx.is_transfer_path:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.While):
+            continue
+        test = node.test
+        is_true = isinstance(test, ast.Constant) and bool(test.value)
+        if is_true and not _loop_can_exit(node):
+            ctx.emit(
+                "TRF001", Severity.ERROR,
+                "unbounded 'while True' retry loop with no break/return/"
+                "raise — bound the attempts (see ResilientTransferService "
+                "retry budget)", node, "retry",
+            )
+
+
+def rule_trf002_bare_except(ctx: LintContext) -> None:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            sev = Severity.ERROR if ctx.is_transfer_path else Severity.WARNING
+            ctx.emit(
+                "TRF002", sev,
+                "bare 'except:' swallows KeyboardInterrupt/SystemExit and "
+                "masks transfer faults — catch a concrete exception",
+                node, "bare-except",
+            )
+        elif (
+            ctx.is_transfer_path
+            and isinstance(node.type, ast.Name)
+            and node.type.id in ("Exception", "BaseException")
+            and len(node.body) == 1
+            and isinstance(node.body[0], ast.Pass)
+        ):
+            ctx.emit(
+                "TRF002", Severity.WARNING,
+                f"'except {node.type.id}: pass' in a transfer path silently "
+                "drops faults the resilience layer should see",
+                node, "bare-except",
+            )
+
+
+def rule_obs001_metric_labels(ctx: LintContext) -> None:
+    for node in ast.walk(ctx.tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _METRIC_FACTORIES
+        ):
+            continue
+        for kw in node.keywords:
+            if kw.arg is None or kw.arg in _METRIC_NON_LABEL_KWARGS:
+                continue
+            if kw.arg.lower() not in _HIGH_CARDINALITY_LABELS:
+                continue
+            if isinstance(kw.value, ast.Constant):
+                continue
+            ctx.emit(
+                "OBS001", Severity.ERROR,
+                f"metric label {kw.arg!r} takes values from an unbounded "
+                "domain with a non-literal value — cardinality grows with "
+                "the grid; aggregate or mark '# lint: allow-metric-labels' "
+                "if the domain is provably bounded",
+                kw.value, "metric-labels", lineno=kw.value.lineno,
+            )
+
+
+def rule_dep001_tuple_read(ctx: LintContext) -> None:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+            continue
+        recv = node.func.value
+        recv_name = recv.id if isinstance(recv, ast.Name) else None
+        if node.func.attr == "read_chunks":
+            ctx.emit(
+                "DEP001", Severity.ERROR,
+                "deprecated tuple read_chunks() shim — use "
+                "transfer(TransferRequest(...)) / TransferResult.chunks",
+                node, "deprecated",
+            )
+        elif (
+            node.func.attr == "read"
+            and len(node.args) == 2
+            and not node.keywords
+            and recv_name != "os"
+        ):
+            ctx.emit(
+                "DEP001", Severity.ERROR,
+                "deprecated tuple read(replica, client_url) shim — use "
+                "transfer(TransferRequest(...))",
+                node, "deprecated",
+            )
+
+
+#: (rule id, implementation) in report order
+RULES: List[Tuple[str, Callable[[LintContext], None]]] = [
+    ("SIM001", rule_sim001_wallclock),
+    ("SIM002", rule_sim002_random),
+    ("TRF001", rule_trf001_unbounded_retry),
+    ("TRF002", rule_trf002_bare_except),
+    ("OBS001", rule_obs001_metric_labels),
+    ("DEP001", rule_dep001_tuple_read),
+]
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_source(text: str, relpath: str) -> List[Diagnostic]:
+    """Run every code rule over one module's source."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [
+            Diagnostic(
+                "GEN001", Severity.ERROR, f"file does not parse: {e.msg}",
+                file=relpath, span=Span(e.lineno or 1, (e.offset or 1)),
+            )
+        ]
+    ctx = LintContext(relpath=relpath, text=text, tree=tree)
+    for _rule_id, fn in RULES:
+        fn(ctx)
+    ctx.diags.sort(key=lambda d: (d.span.line if d.span else 0, d.rule))
+    return ctx.diags
+
+
+def lint_file(path: str, relpath: Optional[str] = None) -> List[Diagnostic]:
+    with open(path) as f:
+        text = f.read()
+    return lint_source(text, relpath or path)

@@ -1,0 +1,176 @@
+"""The one diagnostic model every analysis layer shares.
+
+Both analyzers — the ClassAd/schema checker (:mod:`.adlint`) and the
+Python repo lint (:mod:`.codelint` / :mod:`.kernelcheck`) — emit the same
+:class:`Diagnostic` shape: a stable rule id, a severity, a message, and a
+location that is either a file span (line/col) or an ad attribute. A
+:class:`Report` aggregates them, renders the human-readable listing, and
+round-trips through the JSON format the CI gate uploads as an artifact.
+
+Rule ids are namespaced by layer:
+
+  ``AD1xx``  ClassAd expression analysis     (adlint)
+  ``ADSxx``  ad ↔ DIT schema consistency      (adlint)
+  ``SIMxx``  sim-determinism (wallclock/rng)  (codelint)
+  ``TRFxx``  transfer-path robustness         (codelint)
+  ``OBSxx``  observability hygiene            (codelint)
+  ``DEPxx``  deprecated in-repo APIs          (codelint)
+  ``KRNxx``  Pallas kernel BlockSpec checks   (kernelcheck)
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, IO, Iterable, Iterator, List, Optional, Union
+
+__all__ = ["Severity", "Span", "Diagnostic", "Report", "REPORT_VERSION"]
+
+REPORT_VERSION = 1
+
+
+class Severity(str, Enum):
+    """Ordered severity: ERROR fails the CI gate, WARNING/INFO do not."""
+
+    ERROR = "error"
+    WARNING = "warning"
+    INFO = "info"
+
+    @property
+    def level(self) -> int:
+        return {"error": 2, "warning": 1, "info": 0}[self.value]
+
+    def __lt__(self, other: "Severity") -> bool:  # type: ignore[override]
+        return self.level < other.level
+
+
+@dataclass(frozen=True)
+class Span:
+    """A source location: 1-based line/col, inclusive-exclusive columns."""
+
+    line: int
+    col: int = 0
+    end_line: Optional[int] = None
+    end_col: Optional[int] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"line": self.line, "col": self.col}
+        if self.end_line is not None:
+            d["end_line"] = self.end_line
+        if self.end_col is not None:
+            d["end_col"] = self.end_col
+        return d
+
+
+@dataclass
+class Diagnostic:
+    """One finding: rule id + severity + message + location."""
+
+    rule: str  # stable id, e.g. "AD101", "SIM001"
+    severity: Severity
+    message: str
+    file: Optional[str] = None  # repo-relative path or ad name
+    span: Optional[Span] = None  # file location, when known
+    attr: Optional[str] = None  # ClassAd attribute the finding is about
+    source: Optional[str] = None  # offending source snippet (one line)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "rule": self.rule,
+            "severity": self.severity.value,
+            "message": self.message,
+        }
+        if self.file is not None:
+            d["file"] = self.file
+        if self.span is not None:
+            d.update(self.span.to_dict())
+        if self.attr is not None:
+            d["attr"] = self.attr
+        if self.source is not None:
+            d["source"] = self.source
+        return d
+
+    def render(self) -> str:
+        """``path:line:col: severity RULE message [attr]`` — one line."""
+        loc = self.file or "<ad>"
+        if self.span is not None:
+            loc += f":{self.span.line}:{self.span.col}"
+        if self.attr is not None:
+            loc += f" ({self.attr})"
+        return f"{loc}: {self.severity.value} {self.rule} {self.message}"
+
+
+class Report:
+    """An ordered collection of diagnostics with counts and JSON I/O."""
+
+    def __init__(self, diagnostics: Optional[Iterable[Diagnostic]] = None):
+        self.diagnostics: List[Diagnostic] = list(diagnostics or [])
+        self.checked_files = 0
+        self.checked_ads = 0
+
+    # ------------------------------------------------------------ building
+    def extend(self, diags: Iterable[Diagnostic]) -> None:
+        self.diagnostics.extend(diags)
+
+    def add(self, diag: Diagnostic) -> None:
+        self.diagnostics.append(diag)
+
+    def __iter__(self) -> Iterator[Diagnostic]:
+        return iter(self.diagnostics)
+
+    def __len__(self) -> int:
+        return len(self.diagnostics)
+
+    # ------------------------------------------------------------- queries
+    def counts(self) -> Dict[str, int]:
+        out = {s.value: 0 for s in Severity}
+        for d in self.diagnostics:
+            out[d.severity.value] += 1
+        return out
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self.diagnostics:
+            out[d.rule] = out.get(d.rule, 0) + 1
+        return out
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity is Severity.ERROR]
+
+    @property
+    def ok(self) -> bool:
+        """True when the CI gate passes (no error-severity findings)."""
+        return not self.errors
+
+    # -------------------------------------------------------------- output
+    def render(self) -> str:
+        lines = [d.render() for d in self.diagnostics]
+        c = self.counts()
+        lines.append(
+            f"analysis: {self.checked_files} file(s), {self.checked_ads} ad(s) "
+            f"checked — {c['error']} error(s), {c['warning']} warning(s), "
+            f"{c['info']} info"
+        )
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "version": REPORT_VERSION,
+            "tool": "repro.analysis",
+            "checked_files": self.checked_files,
+            "checked_ads": self.checked_ads,
+            "counts": self.counts(),
+            "by_rule": self.by_rule(),
+            "ok": self.ok,
+            "diagnostics": [d.to_dict() for d in self.diagnostics],
+        }
+
+    def dump_json(self, path_or_file: Union[str, IO[str]]) -> None:
+        payload = json.dumps(self.to_dict(), indent=2) + "\n"
+        if isinstance(path_or_file, str):
+            with open(path_or_file, "w") as f:
+                f.write(payload)
+        else:
+            path_or_file.write(payload)

@@ -1,0 +1,169 @@
+"""Pallas kernel lint: BlockSpec shape/alignment checks (KRNxx rules).
+
+TPU vector memory tiles float32 as (8, 128) — sublane × lane. A BlockSpec
+whose lane (last) dimension is not a multiple of 128, or whose sublane
+(second-to-last) dimension is not a multiple of 8, forces relayouts or
+fails to lower on real hardware even though ``interpret=True`` hides it.
+The matchrank/bwstats wrappers guarantee this by construction (``block_s
+= 512``, ``A_PAD % 128 == 0``); these rules keep future edits honest.
+
+Rules (files under ``kernels/`` only):
+
+  KRN001  lane-misaligned       resolvable last block dim is neither 1
+                                nor a multiple of 128
+  KRN002  sublane-misaligned    resolvable second-to-last block dim is
+                                neither 1 nor a multiple of 8
+  KRN003  index-map-arity       BlockSpec index_map lambda arity differs
+                                from the rank of the ``grid`` tuple in
+                                scope
+
+Dims are resolved from integer literals, enclosing-function keyword
+defaults (``block_s: int = 512``) and module-level integer constants;
+runtime-shaped dims (``a_pad``) are deliberately skipped — the wrappers
+assert those at call time. Suppress with ``# lint: allow-kernel``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from .codelint import LintContext
+from .diagnostics import Diagnostic, Severity
+
+__all__ = ["check_source", "check_file"]
+
+_LANE = 128
+_SUBLANE = 8
+
+_BINOPS = {
+    ast.Add: lambda a, b: a + b,
+    ast.Sub: lambda a, b: a - b,
+    ast.Mult: lambda a, b: a * b,
+    ast.FloorDiv: lambda a, b: a // b if b else None,
+    ast.Mod: lambda a, b: a % b if b else None,
+}
+
+
+def _resolve(expr: ast.AST, env: Dict[str, int]) -> Optional[int]:
+    """Best-effort static value of a block dimension; None when dynamic."""
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int) \
+            and not isinstance(expr.value, bool):
+        return expr.value
+    if isinstance(expr, ast.Name):
+        return env.get(expr.id)
+    if isinstance(expr, ast.BinOp) and type(expr.op) in _BINOPS:
+        left = _resolve(expr.left, env)
+        right = _resolve(expr.right, env)
+        if left is None or right is None:
+            return None
+        return _BINOPS[type(expr.op)](left, right)
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub):
+        v = _resolve(expr.operand, env)
+        return -v if v is not None else None
+    return None
+
+
+def _int_defaults(fn: ast.FunctionDef) -> Dict[str, int]:
+    """Parameter → value for int-literal defaults (positional + kw-only)."""
+    out: Dict[str, int] = {}
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    for arg, default in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        v = _resolve(default, {})
+        if v is not None:
+            out[arg.arg] = v
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            v = _resolve(default, {})
+            if v is not None:
+                out[arg.arg] = v
+    return out
+
+
+def _module_consts(tree: ast.Module) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            v = _resolve(node.value, {})
+            if v is not None:
+                out[node.targets[0].id] = v
+    return out
+
+
+def _is_blockspec(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr == "BlockSpec"
+    return isinstance(f, ast.Name) and f.id == "BlockSpec"
+
+
+def _grid_assignments(fn: ast.FunctionDef) -> List[tuple]:
+    """(lineno, rank) for each ``grid = (...)`` in the function body."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "grid" \
+                and isinstance(node.value, ast.Tuple):
+            out.append((node.lineno, len(node.value.elts)))
+    return out
+
+
+def check_source(text: str, relpath: str) -> List[Diagnostic]:
+    """Run the KRN rules over one kernel module's source."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return []  # codelint already reports GEN001 for this file
+    ctx = LintContext(relpath=relpath, text=text, tree=tree)
+    consts = _module_consts(tree)
+
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        env = {**consts, **_int_defaults(fn)}
+        grids = _grid_assignments(fn)
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call) and _is_blockspec(node)):
+                continue
+            if not node.args or not isinstance(node.args[0], ast.Tuple):
+                continue
+            dims = node.args[0].elts
+            resolved = [_resolve(d, env) for d in dims]
+            lane = resolved[-1]
+            if lane is not None and lane != 1 and lane % _LANE != 0:
+                ctx.emit(
+                    "KRN001", Severity.ERROR,
+                    f"BlockSpec lane (last) dimension {lane} is not a "
+                    f"multiple of {_LANE} — float32 min tile is "
+                    f"({_SUBLANE}, {_LANE})", node, "kernel",
+                )
+            if len(resolved) >= 2:
+                sub = resolved[-2]
+                if sub is not None and sub != 1 and sub % _SUBLANE != 0:
+                    ctx.emit(
+                        "KRN002", Severity.ERROR,
+                        f"BlockSpec sublane dimension {sub} is not a "
+                        f"multiple of {_SUBLANE} — float32 min tile is "
+                        f"({_SUBLANE}, {_LANE})", node, "kernel",
+                    )
+            if len(node.args) >= 2 and isinstance(node.args[1], ast.Lambda):
+                arity = len(node.args[1].args.args)
+                prior = [g for g in grids if g[0] <= node.lineno]
+                grid_rank = (prior[-1] if prior else grids[0])[1] if grids else None
+                if grid_rank is not None and arity != grid_rank:
+                    ctx.emit(
+                        "KRN003", Severity.ERROR,
+                        f"BlockSpec index_map takes {arity} argument(s) but "
+                        f"the grid in scope has rank {grid_rank}",
+                        node, "kernel",
+                    )
+    ctx.diags.sort(key=lambda d: (d.span.line if d.span else 0, d.rule))
+    return ctx.diags
+
+
+def check_file(path: str, relpath: Optional[str] = None) -> List[Diagnostic]:
+    with open(path) as f:
+        text = f.read()
+    return check_source(text, relpath or path)

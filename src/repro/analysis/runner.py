@@ -1,0 +1,120 @@
+"""CLI driver: ``python -m repro.analysis`` — the CI analysis gate.
+
+Walks Python sources through the repo lint (:mod:`.codelint`) and — for
+files under ``kernels/`` — the Pallas BlockSpec checks
+(:mod:`.kernelcheck`); validates ClassAd files (``*.ad``) through the
+ad/schema analyzer (:mod:`.adlint`). Emits the shared one-line-per-finding
+listing and, with ``--json``, the versioned report CI uploads as an
+artifact. Exit status 1 when any error-severity diagnostic exists.
+
+Usage::
+
+    python -m repro.analysis src/repro --ads examples/ads --json report.json
+    python -m repro.analysis src/repro/core/broker.py
+    python -m repro.analysis --ads examples/ads/request_read.ad
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Iterable, List, Optional
+
+from . import adlint, codelint, kernelcheck
+from .diagnostics import Report
+
+__all__ = ["main", "build_report"]
+
+
+def _iter_py_files(path: str) -> Iterable[str]:
+    if os.path.isfile(path):
+        yield path
+        return
+    for dirpath, dirnames, filenames in os.walk(path):
+        dirnames.sort()
+        dirnames[:] = [d for d in dirnames if d not in ("__pycache__", ".git")]
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                yield os.path.join(dirpath, fname)
+
+
+def _iter_ad_files(path: str) -> Iterable[str]:
+    if os.path.isfile(path):
+        yield path
+        return
+    for dirpath, dirnames, filenames in os.walk(path):
+        dirnames.sort()
+        for fname in sorted(filenames):
+            if fname.endswith(".ad"):
+                yield os.path.join(dirpath, fname)
+
+
+def _relpath(path: str) -> str:
+    try:
+        rel = os.path.relpath(path)
+    except ValueError:  # pragma: no cover - cross-drive on win32
+        rel = path
+    return rel.replace(os.sep, "/")
+
+
+def build_report(
+    paths: Iterable[str] = (), ad_paths: Iterable[str] = ()
+) -> Report:
+    """Run every analyzer over the given trees; shared by CLI and tests."""
+    report = Report()
+    for root in paths:
+        for path in _iter_py_files(root):
+            rel = _relpath(path)
+            report.extend(codelint.lint_file(path, rel))
+            if "kernels" in rel.split("/"):
+                report.extend(kernelcheck.check_file(path, rel))
+            report.checked_files += 1
+    for root in ad_paths:
+        for path in _iter_ad_files(root):
+            report.extend(adlint.check_ad_file(path, name=_relpath(path)))
+            report.checked_ads += 1
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="ClassAd/schema analyzer + repo lint (the CI analysis gate)",
+    )
+    parser.add_argument(
+        "paths", nargs="*",
+        help="Python files or directories to lint (default: none)",
+    )
+    parser.add_argument(
+        "--ads", action="append", default=[], metavar="PATH",
+        help="ClassAd file or directory of *.ad files to validate "
+             "(repeatable)",
+    )
+    parser.add_argument(
+        "--json", metavar="FILE", default=None,
+        help="also write the versioned JSON report here",
+    )
+    parser.add_argument(
+        "--quiet", action="store_true",
+        help="suppress the per-finding listing; print only the summary line",
+    )
+    args = parser.parse_args(argv)
+
+    if not args.paths and not args.ads:
+        parser.error("nothing to analyze: give source paths and/or --ads")
+
+    report = build_report(args.paths, args.ads)
+
+    if args.quiet:
+        out = report.render().splitlines()[-1]
+    else:
+        out = report.render()
+    print(out)
+    if args.json:
+        report.dump_json(args.json)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

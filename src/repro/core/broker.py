@@ -32,6 +32,7 @@ The broker executes the three phases of §5.1.2:
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Protocol, Sequence, Tuple
 
@@ -152,6 +153,12 @@ class NoReplicaError(BrokerError):
 
 class NoMatchError(BrokerError):
     """Replicas exist but none satisfied the two-sided requirements."""
+
+
+class AdValidationError(BrokerError):
+    """``ad_check="strict"``: the request ad has error-severity findings
+    from the static analyzer (undefined attributes, type confusions,
+    unsatisfiable requirements) that would silently distort selection."""
 
 
 @dataclass
@@ -386,6 +393,7 @@ class DataBroker:
         tracer: Optional[Tracer] = None,
         audit: Optional[AuditTrail] = None,
         audit_capacity: int = 1024,
+        ad_check: str = "warn",
     ):
         self.client_url = client_url
         self.catalog = catalog
@@ -414,6 +422,14 @@ class DataBroker:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else Tracer()
         self.audit = audit if audit is not None else AuditTrail(audit_capacity)
+        if ad_check not in ("off", "warn", "strict"):
+            raise ValueError(f"ad_check must be off|warn|strict, got {ad_check!r}")
+        # request-ad static analysis at select time: "warn" records analyzer
+        # findings into the decision record; "strict" additionally refuses
+        # error-severity ads. Results are memoized per distinct ad source.
+        self.ad_check = ad_check
+        self._ad_diag_cache: "OrderedDict[str, List[Dict[str, Any]]]" = OrderedDict()
+        self._ad_diag_cache_size = 128
         self.last_request_id: Optional[str] = None
         self.last_request_ids: List[str] = []
         # pre-bound counters: the hot path touches these per call, so the
@@ -434,6 +450,7 @@ class DataBroker:
                 ("batched_interp_requests", "requests answered by the interpreter"),
                 ("snapshot_builds", "GRIS snapshot (re)builds"),
                 ("snapshot_reuses", "GRIS snapshot TTL reuses"),
+                ("ad_findings", "request-ad analyzer findings recorded"),
             )
         }
         self._h_gris_query = self.metrics.histogram(
@@ -476,8 +493,6 @@ class DataBroker:
     # ------------------------------------------------------------------ Search
     def search(self, lfn: str, attrs: Optional[Sequence[str]] = None) -> List[ReplicaView]:
         """Search Phase: catalog → per-replica GRIS query → ClassAd views."""
-        import time as _time
-
         self._ctr["searches"].inc()
         replicas = self.catalog.lookup(lfn)
         if not replicas:
@@ -487,9 +502,9 @@ class DataBroker:
             gris = self.gris_resolver(pfn.endpoint)
             if gris is None:
                 continue  # endpoint unreachable: skip (failover will cover)
-            q0 = _time.perf_counter()
-            entry = gris.flattened_view(source=self.client_url)
-            self._h_gris_query.observe(_time.perf_counter() - q0)
+            with self.tracer.span("broker.gris_query", endpoint=pfn.endpoint) as sp:
+                entry = gris.flattened_view(source=self.client_url)
+            self._h_gris_query.observe(sp.duration)
             entry.setdefault("endpoint", pfn.endpoint)
             entry.setdefault("replicaPath", pfn.path)
             entry.setdefault("replicaSize", pfn.size)
@@ -535,6 +550,37 @@ class DataBroker:
         agg = self.local_monitor.aggregate["read"]
         return agg.mean if agg.n >= 3 else None
 
+    def _check_request_ad(self, req: ClassAd, rec) -> None:
+        """Static analysis of the request ad (``ad_check``), recorded into
+        the decision record. Memoized per distinct ad source — the common
+        case (the default read request, a scheduler's fixed template) pays
+        the analyzer exactly once per broker."""
+        if self.ad_check == "off":
+            return
+        key = ";".join(f"{k}={e!r}" for k, e in req.items())
+        diags = self._ad_diag_cache.get(key)
+        if diags is None:
+            from repro.analysis.adlint import check_request_ad
+
+            diags = [d.to_dict() for d in check_request_ad(req)]
+            self._ad_diag_cache[key] = diags
+            if len(self._ad_diag_cache) > self._ad_diag_cache_size:
+                self._ad_diag_cache.popitem(last=False)
+        else:
+            self._ad_diag_cache.move_to_end(key)
+        if diags:
+            rec.ad_diagnostics = list(diags)
+            self._ctr["ad_findings"].inc(len(diags))
+            if self.ad_check == "strict" and any(
+                d["severity"] == "error" for d in diags
+            ):
+                msgs = "; ".join(
+                    f"{d['rule']}: {d['message']}"
+                    for d in diags if d["severity"] == "error"
+                )
+                rec.error = f"AdValidationError: {msgs}"
+                raise AdValidationError(msgs)
+
     def _result(
         self,
         lfn: str,
@@ -571,6 +617,7 @@ class DataBroker:
         rec = self.audit.begin(lfn, mode="select", at=self.clock.now())
         rec.top_k = top_k
         self.last_request_id = rec.request_id
+        self._check_request_ad(req, rec)
         try:
             views, ranked, path = self._select_impl(lfn, req)
         except BrokerError as e:
@@ -726,6 +773,13 @@ class DataBroker:
         with self.tracer.span("broker.batch_search", batch=n):
             for i, (lfn, req) in enumerate(queries):
                 reqs[i] = req if req is not None else default_read_request(self.client_url)
+                try:
+                    self._check_request_ad(reqs[i], recs[i])
+                except AdValidationError as e:
+                    if strict:
+                        raise
+                    results[i] = e
+                    continue
                 try:
                     replicas = self.catalog.lookup(lfn)
                 except CatalogError:

@@ -36,6 +36,7 @@ from .schema import (
     SOURCE_TRANSFER_BANDWIDTH,
     TRANSFER_BANDWIDTH,
     ObjectClass,
+    SchemaError,
     validate_entry,
 )
 
@@ -125,6 +126,11 @@ class StorageGRIS:
         # optional obs registry (settable after construction: a broker can
         # attach its own to the GRISes it polls — see launch/serve.py)
         self.metrics: Any = None
+        # static analysis of the admin's usage policy at registration time:
+        # a policy with a typo'd attribute or a cis/cisfloat confusion would
+        # otherwise only surface as a silent non-match at selection
+        self.policy_diagnostics: List[Any] = []
+        self._analyze_policy()
 
     # -- instrumentation ------------------------------------------------------
     def ttl_cache_stats(self) -> Dict[str, int]:
@@ -147,9 +153,37 @@ class StorageGRIS:
                 "fraction of dynamic-attribute reads served from TTL cache",
             ).set(stats["hits"] / lookups if lookups else 0.0)
 
+    def _analyze_policy(self) -> None:
+        """Run the ClassAd analyzer over the static ``requirements``
+        policy, if any. Findings are kept on ``policy_diagnostics``; with
+        ``validate=True`` an error-severity finding refuses registration,
+        like any other schema violation."""
+        policy = None
+        for k, v in self._static.items():
+            if k.lower() == "requirements" and isinstance(v, str):
+                policy = v
+                break
+        if policy is None:
+            self.policy_diagnostics = []
+            return
+        from repro.analysis.adlint import check_policy_source
+
+        self.policy_diagnostics = check_policy_source(policy, name=self.dn)
+        if self.validate:
+            errors = [
+                d for d in self.policy_diagnostics if d.severity.value == "error"
+            ]
+            if errors:
+                raise SchemaError(
+                    "invalid requirements policy: "
+                    + "; ".join(f"{d.rule}: {d.message}" for d in errors)
+                )
+
     # -- attribute management ------------------------------------------------
     def set_static(self, name: str, value: Any) -> None:
         self._static[name] = value
+        if name.lower() == "requirements":
+            self._analyze_policy()
 
     def register_dynamic(
         self, name: str, provider: Callable[[], Any], ttl: float = 5.0

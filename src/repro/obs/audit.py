@@ -64,6 +64,9 @@ class DecisionRecord:
     plan_cache: Optional[str] = None  # "hit" | "miss" | None (tier unused)
     snapshot: Optional[str] = None  # "build" | "reuse" | None
     error: Optional[str] = None  # BrokerError name when the selection failed
+    # request-ad analyzer findings (repro.analysis Diagnostic dicts),
+    # recorded when the broker runs with ad_check enabled
+    ad_diagnostics: List[Dict[str, Any]] = field(default_factory=list)
 
     # --- Access Phase (filled by DataBroker.access) ---
     accessed: bool = False

@@ -96,7 +96,7 @@ class Tracer:
         jax_annotations: bool = False,
         max_spans: int = 8192,
     ):
-        self.time_fn = time_fn or time.perf_counter
+        self.time_fn = time_fn or time.perf_counter  # lint: allow-wallclock
         self.jax_annotations = bool(jax_annotations)
         self._spans: Deque[Span] = deque(maxlen=int(max_spans))
         self._stack: List[Span] = []

@@ -122,7 +122,9 @@ class BreakerBoard:
                 g = self.metrics.gauge(
                     "resilient_breaker_state",
                     "circuit state per endpoint (0 closed, 0.5 half-open, 1 open)",
-                    endpoint=br.endpoint,
+                    # one gauge per grid endpoint: the registry's cardinality
+                    # cap bounds this even on very large grids
+                    endpoint=br.endpoint,  # lint: allow-metric-labels
                 )
                 self._gauges[br.endpoint] = g
             g.set(br.value)
