@@ -65,4 +65,15 @@ def run():
     # flattened-view construction (what the broker converts per replica)
     us = _time(lambda: ep0.gris.flattened_view(source="client://c"), 200)
     rows.append(("gris_flattened_view", us, 1e6 / us))
+
+    # LDIF entry → ClassAd ingest over realistic flattened views (the
+    # broker's per-row snapshot cost; derived = entries/sec)
+    from repro.core.ldif import entry_to_classad
+
+    entries = [
+        grid.endpoints[ep].gris.flattened_view(source="client://c")
+        for ep in grid.alive_endpoints()
+    ]
+    us = _time(lambda: [entry_to_classad(e) for e in entries], 50)
+    rows.append(("gris_ldif_entries_per_sec", us, len(entries) / us * 1e6))
     return rows

@@ -176,6 +176,11 @@ def run():
 
             us_d = _time(dense, 2, max_warm=3)
             rows.append((f"match_batched_dense_b64_s{tag}", us_d, 64 * s / us_d * 1e6))
+            # dense fallback must stay within 20x of the sparse walk —
+            # the host path is the safety net when plans don't
+            # canonicalize, so it can't be allowed to rot (us_b still
+            # holds the b=64 sparse figure from the loop above)
+            rows.append(("match_dense_vs_sparse_b64_s10k", 0.0, us_d / us_b))
 
     # LDIF→ClassAd conversion throughput (the §6 'not cumbersome' claim)
     _, _, views = make_world(1000, seed=1)

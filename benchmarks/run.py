@@ -21,6 +21,7 @@ run over run instead of living only in CI logs.
 """
 
 import argparse
+import gc
 import json
 import sys
 import time
@@ -28,6 +29,12 @@ import traceback
 
 
 def main() -> None:
+    # Allocation-heavy benches otherwise measure CPython's collector more
+    # than the code under test: once jax is imported, its XLA gc callback
+    # runs on EVERY collection (~170µs each), and the default 700-alloc
+    # gen0 threshold fires one per ~17 converted LDIF entries. Rarer
+    # collections, identical semantics.
+    gc.set_threshold(100_000, 50, 50)
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run only benches whose module name contains this")
     ap.add_argument(
@@ -61,6 +68,7 @@ def main() -> None:
         bench_pipeline,
         bench_predictors,
         bench_selection_quality,
+        bench_sharded,
         bench_transfer,
     )
 
@@ -73,6 +81,7 @@ def main() -> None:
         "kernels": bench_kernels,
         "transfer": bench_transfer,
         "analysis": bench_analysis,
+        "sharded": bench_sharded,
     }
 
     from repro.obs import Tracer
@@ -130,6 +139,18 @@ def main() -> None:
     if "analysis_check_ad" in derived:
         checks.append(("ad analyzer checks >=1k ads/sec",
                        derived["analysis_check_ad"] >= 1000))
+    if "match_dense_vs_sparse_b64_s10k" in derived:
+        checks.append(("dense batched fallback <=20x sparse walk @B=64 S=10k",
+                       derived["match_dense_vs_sparse_b64_s10k"] <= 20))
+    if "gris_ldif_entries_per_sec" in derived:
+        checks.append(("LDIF->ClassAd ingest >=100k entries/sec",
+                       derived["gris_ldif_entries_per_sec"] >= 100_000))
+    if "sharded_vs_flat_columnar_b64_s100k_g8" in derived:
+        checks.append(("sharded steady state >=5x flat columnar-steady @S=100k G=8",
+                       derived["sharded_vs_flat_columnar_b64_s100k_g8"] >= 5))
+    if "sharded_delta_vs_full_repush_s100k" in derived:
+        checks.append(("1% delta refresh >=10x faster than full epoch re-push @S=100k",
+                       derived["sharded_delta_vs_full_repush_s100k"] >= 10))
 
     bad = [c for c, ok in checks if not ok]
     for c, ok in checks:

@@ -388,6 +388,8 @@ class DataBroker:
         snapshot_ttl: float = 5.0,
         batch_use_kernel: bool = False,
         batch_use_sparse: bool = False,
+        snapshot_shards: int = 0,
+        shard_key: Optional[Callable[[str], int]] = None,
         plan_cache_size: int = 256,
         metrics: Optional[MetricsRegistry] = None,
         tracer: Optional[Tracer] = None,
@@ -412,6 +414,11 @@ class DataBroker:
         self.snapshot_ttl = snapshot_ttl
         self.batch_use_kernel = batch_use_kernel
         self.batch_use_sparse = batch_use_sparse
+        # sharded matchmaking (DESIGN.md §9): partition the snapshot into
+        # this many per-registrant shards (0 = flat snapshot). shard_key
+        # maps endpoint → bucket; default is the crc32 hash bucketing.
+        self.snapshot_shards = int(snapshot_shards)
+        self.shard_key = shard_key
         self._plan_cache = None  # lazily built (pulls in core.plancache)
         self._plan_cache_size = plan_cache_size
         self._snap_state: Optional[_SnapshotState] = None
@@ -446,13 +453,20 @@ class DataBroker:
                 ("batch_selects", "select_many batches"),
                 ("batched_kernel_requests", "requests answered by the stacked kernel"),
                 ("batched_sparse_requests", "requests answered by sparse top-k"),
+                ("batched_sharded_requests", "requests answered by the sharded walk+merge"),
                 ("batched_columnar_requests", "requests answered columnar per-request"),
                 ("batched_interp_requests", "requests answered by the interpreter"),
                 ("snapshot_builds", "GRIS snapshot (re)builds"),
                 ("snapshot_reuses", "GRIS snapshot TTL reuses"),
+                ("snapshot_delta_refreshes", "sharded snapshots refreshed in place (dirty shards only)"),
                 ("ad_findings", "request-ad analyzer findings recorded"),
             )
         }
+        self._ctr_shard_rows = self.metrics.counter(
+            "shard_refresh_rows_total",
+            "rows re-pushed to the device by sharded delta refreshes",
+        )
+        self._shard_hists: Dict[int, Any] = {}
         self._h_gris_query = self.metrics.histogram(
             "broker_gris_query_seconds", "per-endpoint GRIS query latency"
         )
@@ -614,6 +628,16 @@ class DataBroker:
         list, plus the executable ``plan`` and the ``request_id`` of the
         decision record :meth:`explain` retrieves."""
         req = request if request is not None else default_read_request(self.client_url)
+        if self.snapshot_shards > 0 and top_k:
+            # sharded brokers answer sequential selections through the
+            # batched sharded tier so they hit the same snapshot + result
+            # cache (requests needing per-(lfn,replica) attributes can't:
+            # those attrs aren't in the shared snapshot)
+            refs = _referenced_attrs(req.lookup_expr("requirements")) | _referenced_attrs(
+                req.lookup_expr("rank")
+            )
+            if not (refs & _PER_REPLICA_ATTRS):
+                return self.select_many([(lfn, req)], top_k=top_k)[0]
         rec = self.audit.begin(lfn, mode="select", at=self.clock.now())
         rec.top_k = top_k
         self.last_request_id = rec.request_id
@@ -672,6 +696,8 @@ class DataBroker:
         ):
             self._ctr["snapshot_reuses"].inc()
             return st
+        if self.snapshot_shards > 0:
+            return self._snapshot_state_sharded(want, now, st)
 
         from .snapshot import ReplicaSnapshot
 
@@ -712,6 +738,131 @@ class DataBroker:
         self._ctr["snapshot_builds"].inc()
         return st
 
+    def _shard_name(self, ep: str) -> str:
+        """Endpoint → shard name. Zero-padded so sorted(shard names) is
+        numeric bucket order (the global row space is shard-major)."""
+        from .snapshot_sharded import shard_by_hash
+
+        bucket = (
+            self.shard_key(ep)
+            if self.shard_key is not None
+            else shard_by_hash(ep, self.snapshot_shards)
+        )
+        return f"shard-{int(bucket) % self.snapshot_shards:03d}"
+
+    def _shard_hist(self, g: int):
+        """Per-shard rank-walk latency histogram (bounded label set: one
+        child per shard index)."""
+        h = self._shard_hists.get(g)
+        if h is None:
+            h = self.metrics.histogram(
+                "broker_shard_rank_seconds",
+                "per-shard sparse rank-walk latency",
+                shard=str(g),
+            )
+            self._shard_hists[g] = h
+        return h
+
+    def _snapshot_state_sharded(
+        self, want: Sequence[str], now: float, st: Optional[_SnapshotState]
+    ) -> _SnapshotState:
+        """Sharded twin of :meth:`_snapshot_state`: endpoints are bucketed
+        into per-registrant shards, and a TTL lapse with unchanged
+        membership becomes a **delta refresh** — unchanged shards never
+        leave the device, changed shards re-push in one scatter — instead
+        of a full rebuild (DESIGN.md §9)."""
+        from .snapshot_sharded import ShardedSnapshot
+
+        known: List[str] = list(st.endpoints) if st is not None else []
+        for ep in want:
+            if st is None or ep not in st.row_of:
+                known.append(ep)
+        by_shard: Dict[str, List[str]] = {}
+        shard_entries: Dict[str, List[Entry]] = {}
+        for ep in known:
+            gris = self.gris_resolver(ep)
+            if gris is None:
+                continue  # endpoint died: drop its row this epoch
+            entry = gris.flattened_view(source=self.client_url)
+            entry.setdefault("endpoint", ep)
+            name = self._shard_name(ep)
+            by_shard.setdefault(name, []).append(ep)
+            shard_entries.setdefault(name, []).append(entry)
+        if not shard_entries:
+            # every endpoint unreachable: an empty flat snapshot keeps the
+            # n == 0 handling in select_many uniform
+            from .snapshot import ReplicaSnapshot
+
+            empty = ReplicaSnapshot([])
+            st = _SnapshotState(
+                snapshot=empty,
+                endpoints=(),
+                row_of={},
+                entries=[],
+                ads=[],
+                table=empty.table(),
+                built_at=now,
+            )
+            self._snap_state = st
+            self._ctr["snapshot_builds"].inc()
+            return st
+
+        shard_names = sorted(shard_entries)
+        prev = st.snapshot if st is not None else None
+        snapshot = None
+        changed: Optional[List[str]] = None
+        if (
+            isinstance(prev, ShardedSnapshot)
+            and prev.shard_names == shard_names
+            and all(
+                len(shard_entries[nm]) == len(prev.entries_by_shard[nm])
+                for nm in shard_names
+            )
+        ):
+            rows_before = prev.pushed_rows
+            try:
+                changed = prev.refresh(shard_entries)
+                snapshot = prev
+            except ValueError:
+                snapshot = None  # vocab/shape drift: fall through to rebuild
+            if snapshot is not None:
+                self._ctr["snapshot_delta_refreshes"].inc()
+                self._ctr_shard_rows.inc(int(snapshot.pushed_rows - rows_before))
+        if snapshot is None:
+            snapshot = ShardedSnapshot(
+                shard_entries, epoch=prev.epoch + 1 if prev is not None else 0
+            )
+
+        rows = [ep for nm in shard_names for ep in by_shard[nm]]
+        entries = [e for nm in shard_names for e in shard_entries[nm]]
+        if changed is not None and st is not None:
+            # delta: re-convert ads only for shards whose entries moved
+            changed_set = set(changed)
+            ads: List[ClassAd] = []
+            pos = 0
+            for nm in shard_names:
+                cnt = len(shard_entries[nm])
+                if nm in changed_set:
+                    ads.extend(entry_to_classad(e) for e in shard_entries[nm])
+                else:
+                    ads.extend(st.ads[pos : pos + cnt])
+                pos += cnt
+        else:
+            ads = [entry_to_classad(e) for e in entries]
+        st = _SnapshotState(
+            snapshot=snapshot,
+            endpoints=tuple(rows),
+            row_of={ep: i for i, ep in enumerate(rows)},
+            entries=entries,
+            ads=ads,
+            table=snapshot.table(),
+            built_at=now,
+        )
+        self._snap_state = st
+        if changed is None:
+            self._ctr["snapshot_builds"].inc()
+        return st
+
     def invalidate_snapshot(self) -> None:
         self._snap_state = None
 
@@ -748,7 +899,10 @@ class DataBroker:
         request must not poison the batch.
         """
         use_kernel = self.batch_use_kernel if use_kernel is None else use_kernel
-        use_sparse = self.batch_use_sparse if use_sparse is None else use_sparse
+        if use_sparse is None:
+            # sharded snapshots answer through the per-shard walk + merge
+            # tier, which rides the sparse gate
+            use_sparse = self.batch_use_sparse or self.snapshot_shards > 0
         self._ctr["batch_selects"].inc()
         n = len(queries)
         self._h_batch.observe(n)
@@ -800,11 +954,15 @@ class DataBroker:
                 raise NoReplicaError(queries[0][0] if queries else "<empty batch>")
             return results
         builds_before = self._ctr["snapshot_builds"].value
+        deltas_before = self._ctr["snapshot_delta_refreshes"].value
         with self.tracer.span("broker.snapshot", endpoints=len(all_endpoints)):
             st = self._snapshot_state(all_endpoints)
-        snap_status = (
-            "build" if self._ctr["snapshot_builds"].value > builds_before else "reuse"
-        )
+        if self._ctr["snapshot_builds"].value > builds_before:
+            snap_status = "build"
+        elif self._ctr["snapshot_delta_refreshes"].value > deltas_before:
+            snap_status = "delta"
+        else:
+            snap_status = "reuse"
         for i in range(n):
             if results[i] is None:
                 recs[i].snapshot = snap_status
@@ -913,8 +1071,27 @@ class DataBroker:
             if use_sparse and top_k:
                 from repro.kernels.matchrank.sparse import canonicalize_plans
 
+                from .snapshot_sharded import ShardedSnapshot
+
                 na = len(kernel_plans[0].attr_names)
-                if canonicalize_plans(kernel_plans, na) is not None:
+                iv = canonicalize_plans(kernel_plans, na)
+                if iv is not None and isinstance(st.snapshot, ShardedSnapshot):
+                    # tier 1a: per-shard walk + hierarchical merge, fronted
+                    # by the per-shard-epoch result cache (DESIGN.md §9)
+                    self._sharded_topk_tier(
+                        st,
+                        iv,
+                        kernel_batch,
+                        replica_lists,
+                        reqs,
+                        recs,
+                        results,
+                        admit_mat,
+                        top_k,
+                        vocab,
+                    )
+                    sparse_done = True
+                elif iv is not None:
                     l_attrs, l_valid = st.snapshot.logical_columns()
                     with self.tracer.span(
                         "broker.sparse_topk",
@@ -1049,6 +1226,107 @@ class DataBroker:
             RankedReplica(ReplicaView(by_row[r], st.entries[r], st.ads[r]), s)
             for r, s in picked
         ]
+
+    def _sharded_topk_tier(
+        self,
+        st: _SnapshotState,
+        iv: Any,
+        kernel_batch: List[int],
+        replica_lists: Sequence[Optional[List[PhysicalFile]]],
+        reqs: Sequence[Optional[ClassAd]],
+        recs: Sequence[Any],
+        results: List[Any],
+        admit_mat: Any,
+        top_k: int,
+        vocab: Tuple[str, ...],
+    ) -> None:
+        """Tier 1a for sharded snapshots: each query is first looked up in
+        the per-shard-epoch result cache — valid while every shard its
+        candidates live in is unchanged — and only the misses walk the
+        per-shard sparse top-k + hierarchical merge (DESIGN.md §9)."""
+        import numpy as np
+        from contextlib import contextmanager
+
+        from repro.kernels.matchrank.sharded import sharded_sparse_topk
+        from repro.kernels.matchrank.sparse import IntervalBatch
+
+        from .plancache import request_cache_key
+
+        snap = st.snapshot
+        answers: Dict[int, Tuple[Any, Any]] = {}  # batch slot → (ti, ts)
+        shard_sets: List[List[int]] = []
+        keys: List[Tuple] = []
+        miss_bis: List[int] = []
+        for bi, i in enumerate(kernel_batch):
+            rows = [
+                r
+                for pfn in replica_lists[i]
+                if (r := st.row_of.get(pfn.endpoint)) is not None
+            ]
+            shard_sets.append(sorted({snap.shard_of_row(r) for r in rows}))
+            key = (
+                "sharded_topk",
+                recs[i].lfn,
+                int(top_k),
+                tuple(sorted(p.endpoint for p in replica_lists[i])),
+                request_cache_key(reqs[i], vocab, self.env),
+                snap.uid,
+            )
+            keys.append(key)
+            hit, val = self.plan_cache.topk_get(key, snap.shard_epochs)
+            if hit:
+                answers[bi] = val
+            else:
+                miss_bis.append(bi)
+        if miss_bis:
+            m = np.asarray(miss_bis, dtype=np.int64)
+            batch_m = IntervalBatch(
+                lo=iv.lo[m],
+                hi=iv.hi[m],
+                used=iv.used[m],
+                weights=iv.weights[m],
+                bias=iv.bias[m],
+                undef_rank=iv.undef_rank[m],
+            )
+            tracer = self.tracer
+
+            @contextmanager
+            def observe(g):
+                with tracer.span("broker.shard_rank", shard=int(g)) as sp:
+                    yield
+                self._shard_hist(int(g)).observe(sp.duration)
+
+            shards = [snap.shard_logical_columns(g) for g in range(snap.g)]
+            with self.tracer.span(
+                "broker.sharded_topk",
+                batch=len(miss_bis),
+                rows=snap.n,
+                shards=snap.g,
+                k=top_k,
+            ):
+                ti, ts = sharded_sparse_topk(
+                    shards,
+                    batch_m,
+                    k=top_k,
+                    offsets=snap.offsets,
+                    admit=admit_mat[m][:, : snap.n],
+                    rank_order=snap.shard_rank_order,
+                    observe=observe,
+                )
+            for j, bi in enumerate(miss_bis):
+                val = (ti[j].copy(), ts[j].copy())
+                touched = {g: int(snap.shard_epochs[g]) for g in shard_sets[bi]}
+                self.plan_cache.topk_put(keys[bi], touched, val)
+                answers[bi] = val
+        for bi, i in enumerate(kernel_batch):
+            ti_row, ts_row = answers[bi]
+            results[i] = self._ranked_from_topk(replica_lists[i], st, ti_row, ts_row)
+            recs[i].kernel_path = "sharded_topk"
+            recs[i].shards = sorted(
+                {snap.shard_of_row(int(r)) for r in ti_row if int(r) >= 0}
+            )
+            self._fill_batched_audit(recs[i], st, results[i])
+            self._ctr["batched_sharded_requests"].inc()
 
     def _fill_batched_audit(
         self, rec, st: _SnapshotState, result: List[RankedReplica], mask=None, score=None

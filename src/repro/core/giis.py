@@ -31,6 +31,9 @@ class Registration:
     registered_at: float
     snapshot: List[Entry] = field(default_factory=list)
     snapshot_at: float = float("-inf")
+    #: bumped only when a refresh actually changed the entries — the key
+    #: sharded snapshots use to skip re-ingesting unchanged registrants
+    epoch: int = 0
 
 
 class GIIS:
@@ -73,12 +76,32 @@ class GIIS:
         if now - reg.snapshot_at >= self.cache_ttl:
             svc = reg.service
             if isinstance(svc, GIIS):
-                reg.snapshot = svc.search(None)
+                new = svc.search(None)
             else:
-                reg.snapshot = svc.entries()
+                new = svc.entries()
+            if new != reg.snapshot:
+                reg.epoch += 1
+            reg.snapshot = new
             reg.snapshot_at = now
             self.refresh_count += 1
         return reg.snapshot
+
+    def registrant_epochs(self, *, refresh: bool = False) -> Dict[str, int]:
+        """Per-registrant change counters — lets a
+        :class:`~repro.core.snapshot_sharded.ShardedSnapshot` tell which
+        shards' source data moved since it was built. With
+        ``refresh=True`` each registrant is TTL-polled first (an epoch
+        can only move when someone polls), without copying any entries."""
+        if refresh:
+            for reg in self._registry.values():
+                self._snapshot(reg)
+        return {name: reg.epoch for name, reg in self._registry.items()}
+
+    def registrant_entries(self, name: str) -> List[Entry]:
+        """One registrant's entries (TTL-fresh), as independent copies —
+        the per-shard drill-down of the paper's two-phase query pattern."""
+        reg = self._registry[name]
+        return [dict(e) for e in self._snapshot(reg)]
 
     def search(
         self,

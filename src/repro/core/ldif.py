@@ -21,9 +21,10 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 
-from .classads import ClassAd, Expr, Literal, parse as parse_expr
+from .classads import ClassAd, Expr, ListExpr, Literal, parse as parse_expr
 
 __all__ = [
     "Entry",
@@ -349,20 +350,44 @@ def parse_filter(text: str) -> Filter:
 _EXPR_ATTRS = {"requirements", "rank"}
 
 
+@lru_cache(maxsize=512)
+def _parse_expr_cached(src: str) -> Expr:
+    """Parsed policy expressions, memoized: a grid's GRIS entries repeat a
+    handful of distinct ``requirements``/``rank`` sources thousands of
+    times (expression trees are immutable, so sharing is safe)."""
+    return parse_expr(src)
+
+
 def entry_to_classad(entry: Mapping[str, Any], *, expr_attrs: Optional[set] = None) -> ClassAd:
     """Convert an LDIF entry into a ClassAd (Match Phase step 1).
 
     Scalar values become literals; the ``requirements`` / ``rank`` strings
     are parsed as ClassAd expressions so site policy survives conversion.
     ``dn`` and ``objectClass`` ride along as plain string attributes.
+
+    This sits on the GRIS hot path (every flattened-view row of every
+    snapshot build), so the common scalar cases skip ``__setitem__``'s
+    isinstance ladder and populate the ad's slots directly; anything
+    exotic falls back to the full assignment path.
     """
     exprs = _EXPR_ATTRS if expr_attrs is None else expr_attrs
     ad = ClassAd()
+    attrs = ad._attrs
+    spelling = ad._spelling
     for k, v in entry.items():
-        if k.lower() in exprs and isinstance(v, str):
-            ad[k] = parse_expr(v)
+        kl = k.lower()
+        tv = v.__class__
+        if tv is str:
+            e = _parse_expr_cached(v) if kl in exprs else Literal(v)
+        elif tv is int or tv is float or tv is bool:
+            e = Literal(v)
+        elif tv is list or tv is tuple:
+            e = ListExpr(tuple(x if isinstance(x, Expr) else Literal(x) for x in v))
         else:
-            ad[k] = list(v) if isinstance(v, (list, tuple)) else v
+            ad[k] = v  # Expr / ClassAd / None: full __setitem__ dispatch
+            continue
+        attrs[kl] = e
+        spelling[kl] = k
     return ad
 
 

@@ -31,7 +31,7 @@ import numpy as np
 
 from .compile import ColumnTable
 
-__all__ = ["ReplicaSnapshot", "numeric_attr_names"]
+__all__ = ["ReplicaSnapshot", "entry_row", "numeric_attr_names"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -56,6 +56,25 @@ def numeric_attr_names(entries: Sequence[Mapping[str, Any]]) -> List[str]:
             if _numeric(v) is not None:
                 names.add(k.lower())
     return sorted(names)
+
+
+def entry_row(
+    entry: Mapping[str, Any], index: Mapping[str, int], a_pad: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One entry's (vals, ok) column vectors over a vocabulary index —
+    the row-fill semantics shared by the flat and sharded snapshots."""
+    vals = np.zeros((a_pad,), dtype=np.float32)
+    ok = np.zeros((a_pad,), dtype=np.float32)
+    for k, v in entry.items():
+        j = index.get(k.lower())
+        if j is None:
+            continue
+        x = _numeric(v)
+        if x is None or not math.isfinite(x):
+            continue  # NaN/inf publishes as Undefined, not a poisoned cell
+        vals[j] = np.float32(x)
+        ok[j] = 1.0
+    return vals, ok
 
 
 class ReplicaSnapshot:
@@ -118,18 +137,7 @@ class ReplicaSnapshot:
 
     # ------------------------------------------------------------- building
     def _row_vectors(self, entry: Mapping[str, Any]) -> Tuple[np.ndarray, np.ndarray]:
-        vals = np.zeros((self.a_pad,), dtype=np.float32)
-        ok = np.zeros((self.a_pad,), dtype=np.float32)
-        for k, v in entry.items():
-            j = self._index.get(k.lower())
-            if j is None:
-                continue
-            x = _numeric(v)
-            if x is None or not math.isfinite(x):
-                continue  # NaN/inf publishes as Undefined, not a poisoned cell
-            vals[j] = np.float32(x)
-            ok[j] = 1.0
-        return vals, ok
+        return entry_row(entry, self._index, self.a_pad)
 
     def _fill_row_host(self, i: int, entry: Mapping[str, Any]) -> None:
         vals, ok = self._row_vectors(entry)

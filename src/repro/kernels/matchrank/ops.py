@@ -27,7 +27,7 @@ from repro.core.compile import (
 )
 
 from .kernel import matchrank_batched_pallas, matchrank_pallas
-from .ref import matchrank_batched_ref, matchrank_ref
+from .ref import NEG_INF, matchrank_batched_ref, matchrank_ref
 
 __all__ = [
     "KernelPlan",
@@ -265,6 +265,120 @@ def _dispatch_batched(
     )
 
 
+#: numpy comparator per opcode (shared encoding with core.compile.OPCODES)
+_CMP_OPS = {
+    0: np.less,
+    1: np.less_equal,
+    2: np.greater,
+    3: np.greater_equal,
+    4: np.equal,
+    5: np.not_equal,
+}
+
+
+def _topk_desc_stable(score: np.ndarray, k: int) -> np.ndarray:
+    """One row's top-k indices with the ``lax.top_k`` contract — score
+    descending, ties → lowest index — via O(S + k·log k) argpartition
+    instead of a full sort."""
+    s = score.shape[0]
+    if k >= s:
+        return np.argsort(-score, kind="stable")[:k]
+    part = np.argpartition(-score, k - 1)[:k]
+    v = score[part].min()  # k-th value; ties at v need index-stable picking
+    gt = np.nonzero(score > v)[0]
+    eq = np.nonzero(score == v)[0][: k - gt.size]
+    idx = np.concatenate([gt, eq])
+    return idx[np.argsort(-score[idx], kind="stable")]
+
+
+def _matchrank_batched_dense_host(
+    attrs, valid, batched: BatchedPlan, admit, s: int, k: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host evaluation of the dense batched fallback, tiled by *shared
+    work* instead of materializing the [B, S, T] einsum of the jnp ref
+    (which made the fallback ~370× slower than the sparse walk).
+
+    Terms are grouped by (column, opcode) — one vectorized compare per
+    group serves every request that asked it (broker batches are
+    near-duplicate plans differing only in thresholds) — and rank forms
+    by (weights, bias) — one [S, A] matvec per distinct rank expression.
+    Semantics are element-identical to :func:`.ref.matchrank_batched_ref`
+    (fail-closed Undefined terms, Condor rank-Undefined → 0.0, top-k
+    ties → lowest row index).
+    """
+    a_host = np.asarray(attrs, dtype=np.float32)[:s]
+    v_raw = np.asarray(valid)[:s]
+    b = batched.b
+    aw = a_host.shape[1]  # logical or pre-padded width, both fine
+    na = len(batched.attr_names)
+
+    def vcol(c: int) -> np.ndarray:  # one validity column, bool, on demand
+        col = np.ascontiguousarray(v_raw[:, c])
+        return col if col.dtype == bool else col > 0.5
+
+    mask = np.empty((b, s), dtype=bool)
+    if admit is None:
+        mask[:] = True
+    else:
+        mask[:] = np.asarray(admit)[:, :s] > 0.5
+
+    act = batched.term_active > 0.5  # [B, T]
+    cols = batched.sel.argmax(axis=2)  # [B, T] — one-hot column per term
+    groups: Dict[Tuple[int, int], List[Tuple[int, np.float32]]] = {}
+    for bi in range(b):
+        for t in np.nonzero(act[bi])[0]:
+            key = (int(cols[bi, t]), int(batched.op_codes[bi, t]))
+            groups.setdefault(key, []).append(
+                (bi, np.float32(batched.thresholds[bi, t]))
+            )
+    for (c, op), members in groups.items():
+        thr = np.array([m[1] for m in members], dtype=np.float32)
+        colv = np.ascontiguousarray(a_host[:, c])  # strided col read once
+        # [M, S] — member rows contiguous for the fold below
+        passed = _CMP_OPS[op](colv[None, :], thr[:, None]) & vcol(c)[None, :]
+        for j, (bi, _) in enumerate(members):
+            mask[bi] &= passed[j]
+
+    rgroups: Dict[Tuple[bytes, float], List[int]] = {}
+    for bi in range(b):
+        rkey = (batched.weights[bi].tobytes(), float(batched.bias[bi]))
+        rgroups.setdefault(rkey, []).append(bi)
+    score = np.empty((b, s), dtype=np.float32)
+    for (wb, bias), members in rgroups.items():
+        wv = np.frombuffer(wb, dtype=np.float32)
+        if (np.abs(wv[na:]) > 0).any():
+            # weight on a padding column = rank references an attribute
+            # outside the vocabulary ⇒ Undefined ⇒ 0.0 for every row
+            sv = np.zeros((s,), dtype=np.float32)
+        else:
+            w = wv[:aw]
+            sv = (a_host @ w + np.float32(bias)).astype(np.float32)
+            wcols = np.nonzero(w)[0]
+            if wcols.size:
+                okw = vcol(wcols[0]).copy()
+                for c in wcols[1:]:
+                    okw &= vcol(c)
+                sv[~okw] = 0.0
+        for bi in members:
+            score[bi] = sv
+
+    out_score = np.where(mask, score, np.float32(NEG_INF))
+    keff = min(k, s)
+    if keff == 1:
+        # the broker's common case: one vectorized argmax (ties → lowest)
+        m = out_score.argmax(axis=1)
+        ti = m[:, None].astype(np.int32)
+        ts = out_score[np.arange(b), m][:, None].astype(np.float32)
+    else:
+        ti = np.empty((b, keff), dtype=np.int32)
+        ts = np.empty((b, keff), dtype=np.float32)
+        for bi in range(b):
+            idx = _topk_desc_stable(out_score[bi], keff)
+            ti[bi] = idx
+            ts[bi] = out_score[bi, idx]
+    return mask, out_score, ti, ts
+
+
 def _is_prepadded(attrs, a_pad: int, block_s: int) -> bool:
     """True when the candidate block is already device-padded (snapshot
     path): lane-aligned columns, block-aligned rows."""
@@ -387,6 +501,11 @@ def matchrank_batched(
     """
     batched = plans if isinstance(plans, BatchedPlan) else stack_plans(list(plans))
     b = batched.b
+    if not use_kernel:
+        # grouped host evaluation — the jnp ref's [B,S,T] einsums are kept
+        # as a parity oracle only (see _matchrank_batched_dense_host)
+        s = attrs.shape[0] if n_rows is None else int(n_rows)
+        return _matchrank_batched_dense_host(attrs, valid, batched, admit, s, k)
     attrs_p, valid_p, s, s_pad = _prepare_columns(
         attrs, valid, batched.a_pad, block_s, n_rows
     )

@@ -1,0 +1,561 @@
+"""Sharded GIIS-scale matchmaking (DESIGN.md §9): ShardedSnapshot layout
+and delta refresh, hierarchical top-k parity vs the flat path (tie-break
+included), per-shard result-cache invalidation, the GIIS bridge, and the
+broker's sharded tier end to end."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: property tests skip, sweeps still run
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: f
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed (requirements-dev.txt)"
+)
+
+from repro.core.classads import parse_classad
+from repro.core.giis import GIIS
+from repro.core.gris import Clock, StorageGRIS
+from repro.core.plancache import PlanCache, request_cache_key
+from repro.core.snapshot_sharded import ShardedSnapshot, shard_by_hash
+from repro.kernels.matchrank.ops import lower_request, matchrank_batched_topk
+from repro.kernels.matchrank.ref import merge_topk_ref
+from repro.kernels.matchrank.sharded import (
+    MERGE_K_PAD,
+    merge_topk_pallas,
+    sharded_matchrank_topk,
+    sharded_sparse_topk,
+)
+from repro.kernels.matchrank.sparse import canonicalize_plans
+from repro.storage.endpoint import build_demo_grid
+
+NAMES = ["availablespace", "maxrdbandwidth", "avgrdbandwidth", "loadfactor"]
+
+REQ_SRCS = [
+    "reqdSpace = 5G; rank = other.avgRDBandwidth;"
+    "requirements = other.availableSpace > 5G && other.maxRDBandwidth >= 50K;",
+    "reqdSpace = 2G; rank = other.maxRDBandwidth;"
+    "requirements = other.availableSpace > 2G;",
+    "rank = other.avgRDBandwidth - other.loadFactor;"
+    "requirements = other.loadFactor < 6;",
+    # impossible: exercises the all-(-inf) merge slots
+    "rank = other.avgRDBandwidth; requirements = other.loadFactor > 1e30;",
+]
+
+
+def make_shard_entries(s, g, seed=0, ties=False, missing_frac=0.1):
+    """Uneven shards over a shared vocabulary; ``ties=True`` quantizes the
+    rank attribute so equal scores are common (tie-break coverage)."""
+    rng = np.random.default_rng(seed)
+    cols = np.stack(
+        [
+            rng.uniform(0, 20 * 1024**3, s),
+            rng.uniform(0, 200 * 1024, s),
+            rng.uniform(0, 100e6, s),
+            rng.uniform(0, 8, s),
+        ],
+        axis=1,
+    )
+    if ties:
+        cols[:, 2] = np.round(cols[:, 2] / 25e6) * 25e6  # ~5 distinct ranks
+    drop = rng.random((s, len(NAMES))) < missing_frac
+    # uneven split: every shard non-empty, sizes differ
+    cuts = np.sort(rng.choice(np.arange(1, s), size=g - 1, replace=False)) if g > 1 else []
+    bounds = [0, *map(int, cuts), s]
+    out = {}
+    for gi in range(g):
+        rows = []
+        for i in range(bounds[gi], bounds[gi + 1]):
+            e = {"endpoint": f"gsiftp://site{gi}/ep{i:05d}"}
+            for j, n in enumerate(NAMES):
+                if not drop[i, j]:
+                    e[n] = float(cols[i, j])
+            rows.append(e)
+        out[f"shard-{gi:03d}"] = rows
+    return out
+
+
+def make_plans(snap, srcs=REQ_SRCS):
+    return [lower_request(parse_classad(src), snap.attr_names) for src in srcs]
+
+
+def flat_topk(snap, plans, k, admit=None):
+    """Flat dense reference (lax.top_k tie-break) over the global rows."""
+    attrs, valid = snap.logical_columns()
+    return matchrank_batched_topk(
+        attrs, valid, plans, k=k, admit=admit, use_sparse=False, use_kernel=False
+    )
+
+
+def assert_topk_equal(got, want):
+    ti_g, ts_g = got
+    ti_w, ts_w = want
+    np.testing.assert_allclose(ts_g, ts_w, rtol=1e-6)
+    live = ~np.isneginf(np.asarray(ts_w))
+    # exact — tie-break contract, not just score parity
+    np.testing.assert_array_equal(np.asarray(ti_g)[live], np.asarray(ti_w)[live])
+    assert (np.asarray(ti_g)[~live] == -1).all()
+
+
+class TestShardedSnapshot:
+    def test_layout_and_global_rows(self):
+        se = make_shard_entries(123, 5, seed=1)
+        snap = ShardedSnapshot(se, device=False)
+        assert snap.g == 5 and snap.n == 123
+        assert snap.shard_names == sorted(se)
+        assert snap.offsets[0] == 0
+        np.testing.assert_array_equal(np.diff(snap.offsets), snap.counts[:-1])
+        # global rows are the shard-major concat of the per-shard views
+        attrs, valid = snap.logical_columns()
+        pos = 0
+        for gi in range(snap.g):
+            a_g, v_g = snap.shard_logical_columns(gi)
+            c = int(snap.counts[gi])
+            np.testing.assert_array_equal(attrs[pos : pos + c], a_g)
+            np.testing.assert_array_equal(valid[pos : pos + c], v_g)
+            for r in range(pos, pos + c):
+                assert snap.shard_of_row(r) == gi
+            pos += c
+        with pytest.raises(IndexError):
+            snap.shard_of_row(snap.n)
+        # shared vocabulary is the lower-cased union across shards
+        assert set(NAMES) <= set(snap.attr_names)
+
+    def test_update_rows_delta_accounting(self):
+        snap = ShardedSnapshot(make_shard_entries(200, 4, seed=2))
+        assert snap.pushed_rows == snap.n
+        eps0 = snap.shard_epochs.copy()
+        # rows 0..4 live in shard 0 only
+        changed = snap.update_rows({r: {"loadFactor": 1.5} for r in range(5)})
+        assert changed == [0]
+        assert snap.pushed_rows == snap.n + int(snap.counts[0])
+        np.testing.assert_array_equal(snap.shard_epochs[1:], eps0[1:])
+        assert snap.shard_epochs[0] == eps0[0] + 1
+        j = snap.attr_names.index("loadfactor")
+        attrs, _ = snap.shard_logical_columns(0)
+        np.testing.assert_allclose(attrs[:5, j], 1.5)
+
+    def test_update_rows_case_insensitive_merge(self):
+        snap = ShardedSnapshot(make_shard_entries(20, 2, seed=3, missing_frac=0.0))
+        name = snap.shard_names[0]
+        entry = snap.entries_by_shard[name][0]
+        keys_before = set(entry)
+        snap.update_rows({0: {"LoadFactor": 7.25}})  # resident spelling differs
+        assert set(entry) == keys_before  # merged, not duplicated
+        assert entry["loadfactor"] == 7.25
+        j = snap.attr_names.index("loadfactor")
+        attrs, valid = snap.shard_logical_columns(0)
+        assert attrs[0, j] == np.float32(7.25) and valid[0, j]
+
+    def test_update_rows_new_attr_falls_back(self):
+        """An update outside the vocabulary can't take the scalar fast
+        path; the full row recompute must still be exact for the
+        in-vocabulary cells."""
+        snap = ShardedSnapshot(make_shard_entries(20, 2, seed=4))
+        snap.update_rows({0: {"loadFactor": 2.5, "newAttr": 9.0}})
+        j = snap.attr_names.index("loadfactor")
+        attrs, valid = snap.shard_logical_columns(0)
+        assert attrs[0, j] == np.float32(2.5) and valid[0, j]
+        assert "newattr" not in snap.attr_names  # vocab is fixed per snapshot
+
+    def test_update_rows_bounds(self):
+        snap = ShardedSnapshot(make_shard_entries(10, 2, seed=5), device=False)
+        with pytest.raises(IndexError):
+            snap.update_rows({10: {"loadFactor": 1.0}})
+        with pytest.raises(IndexError):
+            snap.update_rows({-1: {"loadFactor": 1.0}})
+
+    def test_refresh_delta_and_structural_errors(self):
+        se = make_shard_entries(60, 3, seed=6)
+        snap = ShardedSnapshot(se)
+        pushed = snap.pushed_rows
+        # identical content ⇒ no shard changes, epoch still rolls
+        assert snap.refresh({k: [dict(e) for e in v] for k, v in se.items()}) == []
+        assert snap.epoch == 1 and snap.pushed_rows == pushed
+        # one changed shard ⇒ only it re-uploads
+        name = snap.shard_names[1]
+        se2 = {k: [dict(e) for e in v] for k, v in se.items()}
+        se2[name][0]["loadfactor"] = 0.125
+        assert snap.refresh(se2) == [name]
+        assert snap.pushed_rows == pushed + int(snap.counts[1])
+        # structural changes refuse the delta path
+        with pytest.raises(ValueError):
+            snap.refresh({k: v for k, v in se2.items() if k != name})
+        grown = {k: [dict(e) for e in v] for k, v in se2.items()}
+        grown[name] = grown[name] + [dict(grown[name][0])]
+        with pytest.raises(ValueError):
+            snap.refresh(grown)
+        drift = {k: [dict(e) for e in v] for k, v in se2.items()}
+        drift[name][0]["brandNew"] = 3.0
+        with pytest.raises(ValueError):
+            snap.refresh(drift)
+
+    def test_rank_order_cache_per_shard(self):
+        snap = ShardedSnapshot(make_shard_entries(80, 4, seed=7), device=False)
+        w = np.zeros(len(snap.attr_names), np.float32)
+        w[snap.attr_names.index("avgrdbandwidth")] = 1.0
+        before = [snap.shard_rank_order(g, w) for g in range(4)]
+        snap.update_rows({0: {"avgRDBandwidth": 1.0}})  # dirties shard 0 only
+        after = [snap.shard_rank_order(g, w) for g in range(4)]
+        assert after[0][0] is not before[0][0]
+        for g in range(1, 4):
+            assert after[g][0] is before[g][0]  # untouched shards stay cached
+
+    def test_shard_by_hash(self):
+        buckets = {shard_by_hash(f"gsiftp://ep{i}", 4) for i in range(64)}
+        assert buckets <= set(range(4)) and len(buckets) > 1
+        assert shard_by_hash("gsiftp://ep0", 4) == shard_by_hash("gsiftp://ep0", 4)
+
+
+class TestHierarchicalTopKParity:
+    @pytest.mark.parametrize("g", [1, 3, 8])
+    @pytest.mark.parametrize("s", [100, 1000])
+    def test_kernel_path_matches_flat(self, g, s):
+        snap = ShardedSnapshot(make_shard_entries(s, g, seed=g * 31 + s))
+        plans = make_plans(snap)
+        attrs, valid, counts = snap.shard_device_columns()
+        got = sharded_matchrank_topk(
+            attrs, valid, plans, counts=counts, offsets=snap.offsets, k=5
+        )
+        assert_topk_equal(got, flat_topk(snap, plans, 5))
+
+    @pytest.mark.parametrize("g", [1, 3, 8])
+    def test_sparse_path_matches_flat_s10k(self, g):
+        snap = ShardedSnapshot(make_shard_entries(10_000, g, seed=g), device=False)
+        plans = make_plans(snap)
+        iv = canonicalize_plans(plans, len(snap.attr_names))
+        assert iv is not None
+        shards = [snap.shard_logical_columns(gi) for gi in range(snap.g)]
+        got = sharded_sparse_topk(
+            shards, iv, k=3, offsets=snap.offsets, rank_order=snap.shard_rank_order
+        )
+        assert_topk_equal(got, flat_topk(snap, plans, 3))
+
+    def test_tie_break_exact_on_equal_ranks(self):
+        """Quantized ranks ⇒ many exact ties; both sharded paths must
+        reproduce lax.top_k's lowest-global-row tie-break."""
+        snap = ShardedSnapshot(make_shard_entries(600, 4, seed=11, ties=True))
+        plans = make_plans(snap, REQ_SRCS[:1] * 3)
+        want = flat_topk(snap, plans, 8)
+        attrs, valid, counts = snap.shard_device_columns()
+        assert_topk_equal(
+            sharded_matchrank_topk(
+                attrs, valid, plans, counts=counts, offsets=snap.offsets, k=8
+            ),
+            want,
+        )
+        iv = canonicalize_plans(plans, len(snap.attr_names))
+        shards = [snap.shard_logical_columns(gi) for gi in range(snap.g)]
+        assert_topk_equal(
+            sharded_sparse_topk(
+                shards, iv, k=8, offsets=snap.offsets,
+                rank_order=snap.shard_rank_order,
+            ),
+            want,
+        )
+
+    def test_admit_mask_parity(self):
+        snap = ShardedSnapshot(make_shard_entries(300, 3, seed=12))
+        plans = make_plans(snap)
+        rng = np.random.default_rng(0)
+        admit = rng.random((len(plans), snap.n)) > 0.5
+        attrs, valid, counts = snap.shard_device_columns()
+        got = sharded_matchrank_topk(
+            attrs, valid, plans, counts=counts, offsets=snap.offsets, k=4,
+            admit=admit,
+        )
+        assert_topk_equal(got, flat_topk(snap, plans, 4, admit=admit))
+
+    def test_merge_ref_parity_after_delta(self):
+        """merge_kernel=False swaps stage 2 for the NumPy oracle; a delta
+        refresh in between must not leak the previous epoch's rows."""
+        snap = ShardedSnapshot(make_shard_entries(200, 4, seed=13))
+        plans = make_plans(snap)
+        snap.update_rows({r: {"avgRDBandwidth": 99e6} for r in range(3)})
+        attrs, valid, counts = snap.shard_device_columns()
+        got = sharded_matchrank_topk(
+            attrs, valid, plans, counts=counts, offsets=snap.offsets, k=5,
+            merge_kernel=False,
+        )
+        assert_topk_equal(got, flat_topk(snap, plans, 5))
+
+
+class TestMergeKernel:
+    def _random_candidates(self, b, g, k, seed=0, dead_rows=()):
+        """Per-shard rank-desc candidate lists (ties → lowest index),
+        flattened shard-major — the merge stage's input contract."""
+        rng = np.random.default_rng(seed)
+        scores = np.empty((b, g * k), np.float32)
+        idx = np.empty((b, g * k), np.int32)
+        for bi in range(b):
+            for gi in range(g):
+                s = np.sort(
+                    rng.choice([0.0, 1.0, 2.5, 7.0, 9.0], size=k).astype(np.float32)
+                )[::-1]
+                n_dead = int(rng.integers(0, k + 1))
+                if n_dead:
+                    s[k - n_dead :] = -np.inf
+                scores[bi, gi * k : (gi + 1) * k] = s
+                idx[bi, gi * k : (gi + 1) * k] = gi * 1000 + np.arange(k)
+        for bi in dead_rows:
+            scores[bi, :] = -np.inf
+        return scores, idx
+
+    @pytest.mark.parametrize("k", [1, 3, 7])
+    def test_kernel_matches_ref(self, k):
+        scores, idx = self._random_candidates(6, 5, k, seed=k, dead_rows=(2,))
+        ts_k, ti_k = merge_topk_pallas(scores, idx, k)
+        ts_r, ti_r = merge_topk_ref(scores, idx, k)
+        np.testing.assert_array_equal(ts_k, ts_r)
+        live = ~np.isneginf(ts_r)
+        np.testing.assert_array_equal(np.asarray(ti_k)[live], ti_r[live])
+
+    def test_candidate_axis_padding(self):
+        # C=10 is nowhere near the 128 lane width: padding must be inert
+        scores, idx = self._random_candidates(3, 2, 5, seed=42)
+        ts_k, ti_k = merge_topk_pallas(scores, idx, 5)
+        ts_r, ti_r = merge_topk_ref(scores, idx, 5)
+        np.testing.assert_array_equal(ts_k, ts_r)
+        assert np.asarray(ts_k).shape == (3, 5)
+
+    def test_k_bound(self):
+        scores, idx = self._random_candidates(1, 1, 2)
+        with pytest.raises(AssertionError):
+            merge_topk_pallas(scores, idx, MERGE_K_PAD + 1)
+
+    def test_merge_matches_flat_stable_topk_seeded(self):
+        """Tie-break contract vs a stable flat sort, without hypothesis:
+        shard-major position order == global row order."""
+        for seed in range(20):
+            self._check_against_stable_sort(seed)
+
+    def _check_against_stable_sort(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 40))
+        g = int(rng.integers(1, 5))
+        k = int(rng.integers(1, 6))
+        flat = rng.choice([-np.inf, 0.0, 1.0, 2.0, 3.0], size=n).astype(np.float32)
+        bounds = np.linspace(0, n, g + 1).astype(int)
+        parts_s, parts_i = [], []
+        for gi in range(g):
+            seg = flat[bounds[gi] : bounds[gi + 1]]
+            order = np.argsort(-seg, kind="stable")[:k]
+            s = np.full(k, -np.inf, np.float32)
+            i = np.zeros(k, np.int32)
+            s[: len(order)] = seg[order]
+            i[: len(order)] = order + bounds[gi]
+            parts_s.append(s)
+            parts_i.append(i)
+        cand_s = np.concatenate(parts_s)[None, :]
+        cand_i = np.concatenate(parts_i)[None, :]
+        ts, ti = merge_topk_ref(cand_s, cand_i, k)
+        want = np.argsort(-flat, kind="stable")[:k]
+        live = ~np.isneginf(ts[0])
+        np.testing.assert_array_equal(ti[0][live], want[live[: len(want)]])
+        np.testing.assert_array_equal(ts[0][live], flat[want][live[: len(want)]])
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_merge_tie_break_property(self, data):
+        seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+        self._check_against_stable_sort(seed)
+
+
+class TestPlanCacheShardedInvalidation:
+    def test_topk_epoch_keys(self):
+        pc = PlanCache()
+        pc.topk_put(("q1",), {0: 0, 2: 5}, "v1")
+        pc.topk_put(("q2",), {1: 3}, "v2")
+        hit, val = pc.topk_get(("q1",), [0, 3, 5])
+        assert hit and val == "v1"
+        # shard 1 moves: q2 (touching shard 1) goes stale, q1 survives
+        hit, _ = pc.topk_get(("q2",), [0, 4, 5])
+        assert not hit and pc.stats["topk_stale"] == 1
+        hit, val = pc.topk_get(("q1",), [0, 4, 5])
+        assert hit and val == "v1"
+        # shard 0 moves: now q1 dies too, and is dropped eagerly
+        hit, _ = pc.topk_get(("q1",), [1, 4, 5])
+        assert not hit
+        assert len(pc._topk) == 0
+
+    def test_update_rows_invalidates_only_touched_shards(self):
+        """The end-to-end contract on real snapshot epochs: a delta in one
+        shard must not evict results whose candidates came entirely from
+        other shards."""
+        snap = ShardedSnapshot(make_shard_entries(100, 4, seed=21), device=False)
+        pc = PlanCache()
+        req = parse_classad(REQ_SRCS[0])
+        key_a = ("sharded_topk", "lfnA") + request_cache_key(req, snap.vocab_key())
+        key_b = ("sharded_topk", "lfnB") + request_cache_key(req, snap.vocab_key())
+        pc.topk_put(key_a, {0: int(snap.shard_epochs[0])}, "from-shard-0")
+        pc.topk_put(key_b, {2: int(snap.shard_epochs[2])}, "from-shard-2")
+        row_in_2 = int(snap.offsets[2])
+        assert snap.update_rows({row_in_2: {"loadFactor": 3.0}}) == [2]
+        hit_a, val_a = pc.topk_get(key_a, snap.shard_epochs)
+        hit_b, _ = pc.topk_get(key_b, snap.shard_epochs)
+        assert hit_a and val_a == "from-shard-0"
+        assert not hit_b and pc.stats["topk_stale"] == 1
+
+
+class TestGIISBridge:
+    def _make_giis(self):
+        clock = Clock()
+        giis = GIIS("o=grid", clock=clock, cache_ttl=5)
+        states = []
+        for i in range(3):
+            g = StorageGRIS(
+                f"gss=vol{i}, o=grid",
+                {"hostname": f"ep{i}", "mountPoint": "/x",
+                 "diskTransferRate": 800e6, "drdTime": 0.004, "dwrTime": 0.005},
+                clock=clock,
+            )
+            state = {"avail": (i + 1) * 1024.0**3}
+            g.register_dynamic("totalSpace", lambda: 100.0 * 1024**3, ttl=5)
+            g.register_dynamic(
+                "availableSpace", lambda st_=state: st_["avail"], ttl=5
+            )
+            g.register_dynamic("loadFactor", lambda: 0.5, ttl=5)
+            giis.register(f"ep{i}", g)
+            states.append((g, state))
+        return clock, giis, states
+
+    def test_from_giis_and_delta_refresh(self):
+        clock, giis, states = self._make_giis()
+        snap = ShardedSnapshot.from_giis(giis)
+        assert snap.shard_names == ["ep0", "ep1", "ep2"]
+        pushed = snap.pushed_rows
+        # nothing moved ⇒ no shard re-uploads
+        assert snap.refresh_from_giis(giis) == []
+        assert snap.pushed_rows == pushed
+        # one site's dynamic attribute changes after its TTL
+        g1, state1 = states[1]
+        state1["avail"] = 7.0 * 1024**3
+        g1.invalidate("availableSpace")
+        clock.advance(6)
+        changed = snap.refresh_from_giis(giis)
+        assert changed == ["ep1"]
+        assert snap.pushed_rows == pushed + int(snap.counts[1])
+        j = snap.attr_names.index("availablespace")
+        attrs, _ = snap.shard_logical_columns(1)
+        assert float(attrs[0, j]) == np.float32(7.0 * 1024**3)
+
+
+REQ_KERNEL = parse_classad(
+    "reqdSpace = 0; rank = other.diskTransferRate;"
+    "requirements = other.availableSpace > 1M;"
+)
+
+
+@pytest.fixture
+def grid():
+    g = build_demo_grid(8, 4, seed=7)
+    g.add_client("client://host0", zone="zone1")
+    g.replicate("f-000", b"x" * (1 << 20),
+                ["gsiftp://ep000", "gsiftp://ep003", "gsiftp://ep005"])
+    g.replicate("f-001", b"y" * (1 << 20), ["gsiftp://ep001", "gsiftp://ep004"])
+    g.replicate("f-002", b"z" * (1 << 19),
+                ["gsiftp://ep002", "gsiftp://ep006", "gsiftp://ep007"])
+    return g
+
+
+def _urls(ranked):
+    return [r.pfn.url for r in ranked]
+
+
+class TestShardedBroker:
+    def test_parity_with_flat_broker(self, grid):
+        flat = grid.broker_for("client://host0")
+        sh = grid.broker_for("client://host0", snapshot_shards=4)
+        queries = [(f"f-00{i}", REQ_KERNEL) for i in range(3)]
+        want = flat.select_many(queries, top_k=2)
+        got = sh.select_many(queries, top_k=2)
+        assert sh.stats["batched_sharded_requests"] == 3
+        for g_, w in zip(got, want):
+            assert _urls(g_) == _urls(w)
+            for x, y in zip(g_, w):
+                assert abs(x.rank - y.rank) <= 1e-6 * max(1.0, abs(y.rank))
+
+    def test_audit_records_shards_and_path(self, grid):
+        b = grid.broker_for("client://host0", snapshot_shards=4)
+        (res,) = b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        rec = b.audit.get(res.request_id)
+        assert rec.kernel_path == "sharded_topk"
+        assert rec.shards  # which corners of the federation answered
+        snap = b._snap_state.snapshot
+        assert rec.shards == sorted(set(rec.shards))
+        assert all(0 <= s < snap.g for s in rec.shards)
+
+    def test_select_delegates_to_sharded_tier(self, grid):
+        b = grid.broker_for("client://host0", snapshot_shards=4)
+        got = b.select("f-000", REQ_KERNEL, top_k=2)
+        assert b.stats["batched_sharded_requests"] == 1
+        flat = grid.broker_for("client://host0")
+        want = flat.select("f-000", REQ_KERNEL, top_k=2)
+        assert _urls(got) == _urls(want)
+
+    def test_per_replica_request_skips_delegation(self, grid):
+        b = grid.broker_for("client://host0", snapshot_shards=4)
+        req = parse_classad(
+            "reqdSpace = 0; rank = other.diskTransferRate;"
+            "requirements = other.replicaSize > 0;"
+        )
+        got = b.select("f-000", req, top_k=2)
+        assert b.stats["batched_sharded_requests"] == 0
+        assert _urls(got)  # still answered (interpreter tier)
+
+    def test_result_cache_hits_and_shard_invalidation(self, grid):
+        b = grid.broker_for("client://host0", snapshot_shards=4)
+        # prime with every lfn so the snapshot spans all 8 endpoints and
+        # f-000's candidates occupy a strict subset of the shards
+        b.select_many([(f"f-00{i}", REQ_KERNEL) for i in range(3)], top_k=2)
+        misses = b.plan_cache.stats["topk_misses"]
+        (res,) = b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        assert b.plan_cache.stats["topk_hits"] >= 1
+        assert b.plan_cache.stats["topk_misses"] == misses
+        rec = b.audit.get(res.request_id)
+        st = b._snap_state
+        snap = st.snapshot
+        # the cached entry is keyed by every shard holding a *candidate*
+        # replica (a superset of the final contributors in rec.shards)
+        cand_shards = sorted({snap.shard_of_row(st.row_of[u]) for u in rec.candidates})
+        # dirty a shard holding no candidate: still a hit
+        untouched = sorted(set(range(snap.g)) - set(cand_shards))
+        assert untouched, "fixture should leave at least one candidate-free shard"
+        snap.update_rows({int(snap.offsets[untouched[0]]): {"loadFactor": 1.0}})
+        hits = b.plan_cache.stats["topk_hits"]
+        b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        assert b.plan_cache.stats["topk_hits"] == hits + 1
+        # dirty a candidate shard: the cached result must die
+        row = int(st.row_of[rec.candidates[0]])
+        snap.update_rows({row: {"loadFactor": 1.0}})
+        stale = b.plan_cache.stats["topk_stale"]
+        b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        assert b.plan_cache.stats["topk_stale"] == stale + 1
+
+    def test_snapshot_delta_refresh_across_ttl(self, grid):
+        b = grid.broker_for("client://host0", snapshot_shards=4)
+        (r0,) = b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        assert b.audit.get(r0.request_id).snapshot == "build"
+        grid.clock.advance(b.snapshot_ttl + 1)
+        (r1,) = b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        assert b.stats["snapshot_delta_refreshes"] >= 1
+        assert b.audit.get(r1.request_id).snapshot == "delta"
+        (r2,) = b.select_many([("f-000", REQ_KERNEL)], top_k=2)
+        assert b.audit.get(r2.request_id).snapshot == "reuse"
